@@ -1,0 +1,78 @@
+"""Per-stage kernel decomposition (the paper's 108-cycle cell pipeline /
+47-cycle normalizer, as per-stage wall times) + staged-vs-fused HBM
+traffic accounting for the Pallas kernels.
+
+CPU wall times use the jnp reference path (XLA-fused -- what the fused
+Pallas kernel mirrors structurally); the Pallas kernels themselves are
+validated in interpret mode (tests/) and targeted at TPU, so we report
+their ANALYTIC per-window HBM bytes, which is the term that determines
+TPU latency (the HOG chain is memory-bound: ~0.02 flops/byte).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hog as H
+
+
+def _time(fn, *args, iters=20):
+    for _ in range(3):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(fast: bool = False):
+    rng = np.random.default_rng(0)
+    B = 64 if fast else 256
+    gray = jnp.asarray(
+        rng.integers(0, 256, (B, 130, 66)).astype(np.float32))
+    cfg = H.PAPER_HOG
+
+    grad = jax.jit(lambda g: H.gradients(g))
+    fx, fy = grad(gray)
+    magbin = jax.jit(lambda a, b: H.mag_bin_sector(a, b))
+    mag, bi = magbin(fx, fy)
+    cell = jax.jit(lambda m, b: H.cell_histograms(m, b, cfg))
+    hist = cell(mag, bi)
+    bnorm = jax.jit(lambda h: H.block_normalize(h, cfg))
+
+    stages = [
+        ("gradient", _time(grad, gray)),
+        ("mag_bin_sector", _time(magbin, fx, fy)),
+        ("mag_bin_cordic",
+         _time(jax.jit(lambda a, b: H.mag_bin_cordic(a, b)), fx, fy)),
+        ("cell_hist", _time(cell, mag, bi)),
+        ("block_norm", _time(bnorm, hist)),
+    ]
+    print("# per-stage times (us/window) -- the 108-cycle/47-cycle "
+          "pipeline decomposition")
+    for name, t in stages:
+        print(f"kernels/{name}_us_per_window,{t/B*1e6:.2f},B={B}")
+
+    # staged vs fused HBM traffic per window (drives TPU latency)
+    in_b = 130 * 66 * 4
+    mag_b = 128 * 64 * 4 * 2          # mag + bin int32
+    hist_b = 16 * 8 * 9 * 4
+    desc_b = 3780 * 4
+    staged = (in_b + mag_b) + (mag_b + hist_b) + (hist_b + desc_b)
+    fused = in_b + desc_b
+    print(f"kernels/staged_hbm_bytes_per_window,{staged},3 pallas_calls")
+    print(f"kernels/fused_hbm_bytes_per_window,{fused},1 pallas_call")
+    print(f"kernels/fused_traffic_reduction,{staged/fused:.2f},x")
+    # v5e roofline latency of the fused kernel per 256-window batch
+    t_mem = fused * 256 / 819e9
+    print(f"kernels/fused_tpu_roofline_us_per_256batch,{t_mem*1e6:.1f},"
+          f"memory-bound")
+    return stages
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""§Roofline: render the per-(arch x shape x mesh) table from the dry-run
+results JSON (results/dryrun.json, produced by launch/dryrun.py).
+
+Per cell: the three terms (s), dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+ratio, MFU at roofline, and per-device memory. This file does not compile
+anything -- it reads the dry-run artifact, so it stays fast in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run(path: str = DEFAULT):
+    if not os.path.exists(path):
+        print(f"roofline/skip,0,no dryrun results at {path}")
+        return
+    with open(path) as f:
+        rows = json.load(f)
+    print("# §Roofline -- arch,shape,mesh,t_compute_s,t_memory_s,t_coll_s,"
+          "bottleneck,useful_flops_frac,mfu,peak_GiB")
+    n_ok = 0
+    for key, r in sorted(rows.items()):
+        if r.get("status") == "skip":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},SKIP,"
+                  f"{r['reason']}")
+            continue
+        if r.get("status") != "ok":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},ERROR,"
+                  f"{r.get('error', '?')}")
+            continue
+        n_ok += 1
+        peak = r["mem"]["peak_bytes"] / 2 ** 30
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+              f"{r['t_coll_s']:.4g},{r['bottleneck']},"
+              f"{r['useful_flops_frac']:.3f},{r['mfu']:.4f},{peak:.2f}")
+    print(f"roofline/cells_ok,{n_ok},")
+
+
+if __name__ == "__main__":
+    run()

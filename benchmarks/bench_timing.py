@@ -1,0 +1,93 @@
+"""Paper Table II: detection timing, software vs co-processor path.
+
+The paper: Matlab 41 ms/window vs ModelSim hardware 0.757 ms at 50 MHz
+(54x). The TPU analogue measured here:
+
+  software path    -- per-window (batch=1) jit'd jnp pipeline on CPU
+                      (the "Matlab" role: one window at a time)
+  co-processor path -- batched pipeline, per-window time amortized over
+                      a 256-window batch (the TPU dataflow role)
+  dense-scene path  -- score_map conv: per-WINDOW time when windows
+                      overlap in a scene (beyond-paper, §Perf)
+  TPU roofline      -- derived per-window latency from the dry-run
+                      (bytes/819GBps vs flops/197TFLOPs), reported by
+                      benchmarks/bench_roofline.py from dryrun.json
+
+Timing on this container is CPU wall time -- the RATIO between the
+software and batched paths is the reproduction target, not the absolute
+numbers (the paper's own 54x compares two implementations on different
+substrates as well).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hog import PAPER_HOG, hog_descriptor
+from repro.core.pipeline import classify_windows
+from repro.core.svm import init_svm
+from repro.core.detector import score_map
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(fast: bool = False):
+    rng = np.random.default_rng(0)
+    svm = init_svm(3780)
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32)) * .01,
+           "b": jnp.float32(0.0)}
+    win1 = jnp.asarray(rng.integers(0, 256, (1, 130, 66, 3)).astype(np.uint8))
+    B = 64 if fast else 256
+    winB = jnp.asarray(rng.integers(0, 256, (B, 130, 66, 3)).astype(np.uint8))
+
+    f1 = jax.jit(lambda w: classify_windows(svm, w)["score"])
+    t_sw = _time(f1, win1)                      # per window, batch=1
+    t_batch = _time(f1, winB) / B               # amortized per window
+
+    fx = jax.jit(lambda w: hog_descriptor(w, PAPER_HOG))
+    t_extract1 = _time(fx, win1)
+    t_extractB = _time(fx, winB) / B
+
+    # dense scene: 320x240 -> ~600 window positions in one conv
+    scene = jnp.asarray(rng.integers(0, 256, (320, 240)).astype(np.float32))
+    sm = jax.jit(lambda s: score_map(s, svm["w"], svm["b"], PAPER_HOG))
+    smap = sm(scene)
+    n_windows = smap.shape[0] * smap.shape[1]
+    t_scene = _time(sm, scene) / n_windows
+
+    print("# Table II -- timing per window (CPU host; ratios are the "
+          "reproduction target)")
+    print(f"table2/attracting_software_ms,{t_extract1*1e3:.3f},paper=16")
+    print(f"table2/attracting_batched_ms,{t_extractB*1e3:.3f},paper=0.411")
+    print(f"table2/detecting_software_ms,{t_sw*1e3:.3f},paper=41")
+    print(f"table2/detecting_batched_ms,{t_batch*1e3:.3f},paper=0.757")
+    # NOTE: on this 1-core CPU host, batching cannot beat batch=1 (no
+    # parallel hardware -- the paper's 54x IS its hardware parallelism).
+    # The two host-measurable analogues of the paper's speedup are:
+    #   * dense-scene amortization (one conv scores ~500 windows), and
+    #   * the TPU roofline latency from the dry-run (60.5 ns/window,
+    #     bench_roofline.py / EXPERIMENTS.md §Roofline).
+    print(f"table2/speedup_batched_cpu_host,{t_sw/t_batch:.1f},"
+          f"paper=54 (needs parallel hw; see dense_scene + roofline)")
+    print(f"table2/detecting_dense_scene_ms,{t_scene*1e3:.4f},"
+          f"windows={n_windows}")
+    print(f"table2/speedup_dense_scene,{t_sw/t_scene:.1f},"
+          f"beyond-paper analogue of the 54x")
+    print(f"table2/tpu_roofline_ns_per_window,60.5,"
+          f"vs paper 757000 ns (dryrun hog cell)")
+    return {"speedup": t_sw / t_scene}
+
+
+if __name__ == "__main__":
+    run()

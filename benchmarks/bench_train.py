@@ -1,0 +1,52 @@
+"""Framework throughput benchmarks: train-step tokens/s and decode
+steps/s for a small config on the host (the large-scale numbers are
+dry-run roofline territory -- see bench_roofline.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import decode_step, init_cache, prefill
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def run(fast: bool = False):
+    cfg = get_config("qwen3-14b", smoke=True)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    B, S = 8, 128
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    step = jax.jit(make_train_step(cfg, OptConfig()))
+    state, _ = step(state, batch)           # compile
+    iters = 5 if fast else 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / iters
+    print(f"train/smoke_tokens_per_s,{B*S/dt:.0f},B={B} S={S}")
+    print(f"train/smoke_step_ms,{dt*1e3:.1f},")
+
+    # decode throughput
+    params = state["params"]
+    pre = {"tokens": jnp.ones((B, 16), jnp.int32)}
+    logits, cache = prefill(params, pre, cfg, max_len=64)
+    dstep = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache = dstep(params, tok, cache)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        logits, cache = dstep(params, tok, cache)
+    jax.block_until_ready(logits)
+    dt = (time.perf_counter() - t0) / iters
+    print(f"serve/smoke_decode_tokens_per_s,{B/dt:.0f},B={B}")
+    return dt
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""HOG descriptors as a VLM patch-embedding frontend.
+
+The assignment stubs qwen2-vl's vision encoder; this example shows the
+paper's feature extractor IS such a frontend: image patches -> HOG
+descriptors (3780-d, contrast-normalized) -> linear projection to
+d_model -> prepended to the token stream of the qwen2-vl (smoke)
+backbone with M-RoPE (t, h, w) positions. A classical-CV co-processor
+feeding a modern multimodal LM -- the paper's §VI pipeline, upgraded.
+
+Usage: PYTHONPATH=src python examples/hog_patch_frontend.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hog import HOGConfig, hog_descriptor
+from repro.models.model import forward, init_params
+
+
+def hog_patch_embed(image: np.ndarray, patch: int = 66,
+                    d_model: int = 64, key=None):
+    """Split an image into patches, HOG each, project to d_model."""
+    H, W, _ = image.shape
+    ph, pw = H // patch, W // patch
+    cfg = HOGConfig(window_h=patch, window_w=patch)
+    patches = np.stack([
+        image[i * patch:(i + 1) * patch, j * patch:(j + 1) * patch]
+        for i in range(ph) for j in range(pw)])
+    desc = hog_descriptor(jnp.asarray(patches), cfg)     # (P, F)
+    proj = jax.random.normal(key, (desc.shape[-1], d_model),
+                             jnp.float32) * desc.shape[-1] ** -0.5
+    return desc @ proj, (ph, pw)
+
+
+def main():
+    cfg = get_config("qwen2-vl-72b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    image = rng.integers(0, 256, (132, 132, 3)).astype(np.uint8)
+
+    embeds, (ph, pw) = hog_patch_embed(image, patch=66,
+                                       d_model=cfg.d_model,
+                                       key=jax.random.PRNGKey(1))
+    n_img = embeds.shape[0]
+    print(f"image 132x132 -> {ph}x{pw} HOG patches -> "
+          f"({n_img}, {cfg.d_model}) embeddings")
+
+    text = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    B, S_txt = text.shape
+    S = n_img + S_txt
+
+    # M-RoPE positions: image patches get (t=0, h=i, w=j); text gets
+    # sequential t after the image block (qwen2-vl scheme)
+    pos_img = np.stack([np.zeros(n_img),
+                        np.repeat(np.arange(ph), pw),
+                        np.tile(np.arange(pw), ph)], -1)
+    t0 = max(ph, pw)
+    pos_txt = np.stack([np.arange(S_txt) + t0] * 3, -1)
+    positions = jnp.asarray(
+        np.concatenate([pos_img, pos_txt])[None], jnp.int32)
+
+    # splice image embeddings in place of the first n_img token slots
+    tokens = jnp.concatenate(
+        [jnp.zeros((1, n_img), jnp.int32), text], axis=1)
+    from repro.models.model import embed_tokens, logits_from_hidden, _scan_layers
+    x = embed_tokens(params, tokens, cfg)
+    x = x.at[:, :n_img].set(embeds[None].astype(cfg.dtype))
+    x = _scan_layers(x, params["layers"], cfg, positions, None)
+    logits = logits_from_hidden(params, x, cfg)
+    print(f"backbone logits: {logits.shape}, "
+          f"finite={bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))}")
+    print("HOG frontend -> M-RoPE VLM backbone: OK")
+
+
+if __name__ == "__main__":
+    main()

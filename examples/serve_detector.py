@@ -1,0 +1,55 @@
+"""The co-processor as a SERVICE: batched request queue in front of the
+jit'd detection step -- the deployment shape the paper sketches in §VI
+(camera -> ARM core -> detection block).
+
+Trains a quick SVM, starts the DetectionService, submits 500 async
+requests, reports latency percentiles + batch occupancy.
+
+Usage: PYTHONPATH=src python examples/serve_detector.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hog import hog_descriptor, PAPER_HOG
+from repro.core.svm import SVMTrainConfig, train_svm
+from repro.data.synth_pedestrian import PedestrianDataConfig, make_windows
+from repro.serve.engine import DetectionService
+
+
+def main():
+    rng = np.random.default_rng(0)
+    dcfg = PedestrianDataConfig()
+    print("training a quick SVM ...")
+    x, y = make_windows(600, 400, dcfg, rng)
+    f = hog_descriptor(jnp.asarray(x), PAPER_HOG)
+    svm, _ = train_svm(f, jnp.asarray(y),
+                       SVMTrainConfig(steps=1500, neg_weight=6.0))
+
+    service = DetectionService(svm, batch_size=64, max_wait_ms=4.0).start()
+    print("submitting 500 requests ...")
+    x_req, y_req = make_windows(250, 250, dcfg, rng)
+    lat = []
+    correct = 0
+    t_all = time.time()
+    futs = []
+    for i in range(len(y_req)):
+        futs.append((time.time(), i, service.submit(x_req[i])))
+    for t0, i, fut in futs:
+        r = fut.get(timeout=60)
+        lat.append(time.time() - t0)
+        correct += int(r["human"] == int(y_req[i]))
+    wall = time.time() - t_all
+    lat_ms = np.sort(np.asarray(lat) * 1e3)
+    print(f"throughput      {len(y_req)/wall:,.0f} windows/s")
+    print(f"latency p50/p95 {lat_ms[len(lat_ms)//2]:.1f} / "
+          f"{lat_ms[int(len(lat_ms)*.95)]:.1f} ms")
+    print(f"accuracy        {correct/len(y_req)*100:.1f}%")
+    print(f"batch occupancy {service.stats['occupancy']*100:.0f}%  "
+          f"({service.stats['batches']} batches)")
+    service.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end LM training driver: data pipeline -> sharded train step ->
+async checkpointing -> resume. Runs a ~5M-param model for a few hundred
+steps on CPU by default; --size 100m selects the ~100M config the
+deliverable names (sized for real hardware; same code path).
+
+Demonstrates the fault-tolerance loop: kill it mid-run and re-launch --
+it resumes from the latest atomic checkpoint.
+
+Usage: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+           [--size tiny|100m] [--ckpt /tmp/repro_ckpt] [--ddp]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.lm_data import LMDataConfig, batches
+from repro.models.configs import ModelConfig
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+SIZES = {
+    # ~5M params: CPU-friendly demo
+    "tiny": ModelConfig(name="tiny-lm", family="dense", n_layers=4,
+                        d_model=256, n_heads=4, n_kv_heads=2, d_ff=683,
+                        vocab=512, rope_theta=1e4),
+    # ~100M params: the deliverable config (run on real hardware)
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                        vocab=50304, rope_theta=1e4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--size", default="tiny", choices=list(SIZES))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = SIZES[args.size]
+    print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.1f}M")
+    opt = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt))  # m/v share zero consts
+
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        print(f"resuming from checkpoint step {latest}")
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        state = mgr.restore(latest, target)
+        start = latest
+
+    data = batches(LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                batch=args.batch))
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        b = next(data)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % 20 == 0:
+            tps = args.batch * args.seq * 20 / (time.time() - t0)
+            print(f"step {step+1:4d}  loss {losses[-1]:.3f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"{tps:,.0f} tok/s")
+            t0 = time.time()
+        if (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step + 1, state)
+    mgr.wait()
+    first = np.mean(losses[:20]) if len(losses) > 20 else losses[0]
+    last = np.mean(losses[-20:])
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNING' if last < first else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def dryrun_table(path: str = "results/dryrun.json",
+                 profile: str = "baseline") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["| arch | shape | mesh | compile_s | peak GiB/dev | arg GiB | "
+           "status |", "|---|---|---|---|---|---|---|"]
+    for k in sorted(rows):
+        r = rows[k]
+        if r.get("profile") != profile:
+            continue
+        if r.get("status") == "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['compile_s']} | {r['mem']['peak_bytes']/2**30:.2f} | "
+                f"{r['mem']['argument_bytes']/2**30:.2f} | ok |")
+        elif r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | -- | "
+                       f"-- | -- | {r['reason'].split(':')[0]} |")
+    return "\n".join(out)
+
+
+def roofline_table(path: str = "results/dryrun.json",
+                   profile: str = "baseline") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["| arch | shape | mesh | T_comp (s) | T_mem (s) | T_coll (s) | "
+           "bottleneck | 6ND/HLO | MFU |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for k in sorted(rows):
+        r = rows[k]
+        if r.get("profile") != profile or r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_coll_s']:.3f} | {r['bottleneck']} | "
+            f"{r['useful_flops_frac']:.2f} | {r['mfu']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    profile = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    if which == "dryrun":
+        print(dryrun_table(profile=profile))
+    else:
+        print(roofline_table(profile=profile))

@@ -1,0 +1,103 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+v5e per-chip constants (the TARGET hardware; this container only compiles):
+    197 TFLOP/s bf16  |  819 GB/s HBM  |  ~50 GB/s/link ICI
+
+Terms (seconds, per step, per chip -- the mesh is SPMD so per-chip ==
+global/chips):
+    T_compute = FLOPs_dev / PEAK
+    T_memory  = HBM_bytes_dev / HBM_BW
+    T_coll    = collective_bytes_dev / ICI_BW
+
+FLOPs/bytes come from the trip-count-corrected HLO parse (hlo_parse.py);
+`cost_analysis()` numbers are reported alongside for reference (they
+undercount scan bodies). MODEL_FLOPS = 6*N*D (active N for MoE; 2*N*D for
+inference) cross-checks how much compiled compute is useful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link (per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    flops_dev: float
+    mem_bytes_dev: float
+    coll_bytes_dev: float
+    model_flops_dev: float = 0.0
+    cost_flops: float = 0.0           # raw cost_analysis (uncorrected)
+    cost_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.mem_bytes_dev / HBM_BW
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_coll}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time (perfect overlap: max of the three)."""
+        return max(self.t_compute, self.t_memory, self.t_coll)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/padding/capacity waste)."""
+        if self.flops_dev <= 0:
+            return 0.0
+        return self.model_flops_dev / self.flops_dev
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        if self.step_time <= 0:
+            return 0.0
+        return (self.model_flops_dev / PEAK_FLOPS) / self.step_time
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_coll_s": self.t_coll,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+            "flops_dev": self.flops_dev,
+            "mem_bytes_dev": self.mem_bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "model_flops_dev": self.model_flops_dev,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """6ND train / 2ND forward (active params for MoE), per device."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * d
+    elif shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * d
+    else:  # decode: one token per sequence
+        d = shape.global_batch
+        total = 2.0 * n_active * d
+    return total / n_chips

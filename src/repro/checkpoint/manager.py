@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-agnostic restore.
+
+Layout (one directory per step):
+    ckpt_dir/step_000100.tmp/...   (written, fsync'd)
+    ckpt_dir/step_000100/          (atomic rename = commit)
+Leaves are stored as raw .npy files keyed by pytree path; metadata.json
+carries the step and tree structure. Restore takes a target
+shape/sharding pytree, so a checkpoint written on one mesh restores onto
+ANY mesh (elastic scaling): values are read on host and device_put with
+the new NamedShardings.
+
+Async: `save_async` snapshots to host (device_get) synchronously -- the
+only part that must be consistent -- then writes in a daemon thread so
+the train loop resumes immediately (preemption-safe: a killed writer
+leaves only a .tmp dir, never a corrupt commit).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from jax.sharding import NamedSharding
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for key, arr in flat.items():
+            fn = os.path.join(tmp, key.replace("/", "__") + ".npy")
+            with open(fn, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+        meta = {"step": step, "keys": sorted(flat.keys())}
+        with open(os.path.join(tmp, "metadata.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic commit
+        self._gc()
+
+    def save(self, step: int, tree: Any) -> None:
+        self._write(step, _flatten(tree))
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()                       # one writer at a time
+        host_tree = jax.device_get(tree)  # consistent snapshot
+        flat = _flatten(host_tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, target: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """target: pytree of arrays or ShapeDtypeStructs (the skeleton).
+        shardings: matching pytree of NamedSharding (or None -> host)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "metadata.json")) as f:
+            meta = json.load(f)
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        sh_flat = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+            if shardings is not None else [None] * len(paths))
+        leaves = []
+        for (kpath, leaf), sh in zip(paths, sh_flat):
+            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in kpath)
+            arr = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
+            if arr.dtype.kind == "V":
+                # bf16 (and other ml_dtypes) round-trip np.save as raw
+                # void bytes: re-view with the target's dtype
+                arr = arr.view(np.dtype(leaf.dtype))
+            want = jax.numpy.asarray(arr).astype(leaf.dtype)
+            if sh is not None:
+                want = jax.device_put(want, sh)   # reshard to the new mesh
+            leaves.append(want)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # --------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        all_steps = sorted(int(d.split("_")[1])
+                           for d in os.listdir(self.dir)
+                           if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

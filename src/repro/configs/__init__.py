@@ -1,0 +1,3 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, SHAPE_BY_NAME,
+                                    ShapeSpec, get_config, input_specs,
+                                    cache_specs, shape_applicable)

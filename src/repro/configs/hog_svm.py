@@ -1,0 +1,24 @@
+"""The paper's own workload config: the HOG+SVM detection co-processor.
+
+Geometry and numerics per Nguyen et al. (2022); PERF variant carries the
+beyond-paper §Perf settings. Used by launch/dryrun.py (--arch
+hog_svm_coproc), benchmarks/bench_accuracy.py and bench_timing.py.
+"""
+import dataclasses
+
+from repro.core.hog import HOGConfig
+from repro.core.svm import SVMTrainConfig
+from repro.data.synth_pedestrian import PedestrianDataConfig
+
+# faithful: fp32 datapath, CORDIC magnitude/angle, NR rsqrt
+FAITHFUL = HOGConfig(mode="cordic")
+
+# TPU-native default: sector-compare binning, hardware rsqrt
+CONFIG = HOGConfig(mode="sector")
+
+# §Perf: bf16 descriptors + bf16 SVM weights (fp32 accumulation)
+PERF = dataclasses.replace(CONFIG, feat_dtype="bf16")
+
+TRAIN = SVMTrainConfig(steps=4000, neg_weight=6.0)
+DATA = PedestrianDataConfig()          # paper split: 4202/2795, 160/134
+BATCH_PER_POD = 16384                  # dry-run serving batch (256 chips)

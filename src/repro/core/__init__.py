@@ -1,0 +1,9 @@
+# The paper's primary contribution: the HOG+SVM human-detection
+# co-processor, as composable JAX modules.
+from repro.core.hog import (HOGConfig, PAPER_HOG, hog_descriptor,
+                            hog_descriptor_batch)
+from repro.core.cordic import cordic_mag_angle, cordic_gain
+from repro.core.svm import (SVMParams, SVMTrainConfig, init_svm, svm_score,
+                            predict, hinge_loss, train_svm, accuracy_table)
+from repro.core.detector import DetectorConfig, detect, score_map
+from repro.core.pipeline import classify_windows, extract_features

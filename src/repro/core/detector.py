@@ -1,0 +1,126 @@
+"""Multi-scale sliding-window human detector.
+
+The paper's hardware detects a single fixed 130x66 window; multi-window /
+multi-resolution detection is listed as "future development". This module
+is that future development, built TPU-natively:
+
+  * The paper's block normalization (eq. 5) is *window-independent* (each
+    2x2-cell block normalizes by its own energy), so the scene's normalized
+    block grid can be computed ONCE and shared by every window.
+  * A window's SVM score is then a dot product between its 15x7 block
+    patch and the weight tensor -- i.e. the whole score map is a single
+    valid-mode convolution, which XLA lowers to MXU matmuls:
+        scores = conv2d(blocks_(BH,BW,36), W_(15,7,36)) + b
+    One conv scores every window position at 8-px stride simultaneously,
+    amortizing HOG across overlapping windows (the classical dense-HOG
+    trick; a large win over the paper's per-window recompute -- quantified
+    in benchmarks/bench_timing.py).
+  * Multi-scale: image pyramid via jax.image.resize, per-scale score maps,
+    box extraction + NMS on host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hog import (HOGConfig, PAPER_HOG, block_normalize,
+                            cell_histograms, gradients, grayscale, _MAG_BIN)
+from repro.core.svm import SVMParams
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    hog: HOGConfig = PAPER_HOG
+    scales: Tuple[float, ...] = (1.0, 0.8, 0.64)
+    score_threshold: float = 0.0          # sign(D(x)) per eq. (7)
+    nms_iou: float = 0.3
+
+
+def scene_blocks(gray: Array, cfg: HOGConfig) -> Array:
+    """Whole-scene normalized block grid: (H, W) -> (BH, BW, 36)."""
+    fx, fy = gradients(gray.astype(jnp.float32))
+    mag, b = _MAG_BIN[cfg.mode](fx, fy, cfg.bins)
+    # trim so the gradient field tiles into whole cells
+    gh = (mag.shape[-2] // cfg.cell) * cfg.cell
+    gw = (mag.shape[-1] // cfg.cell) * cfg.cell
+    mag, b = mag[..., :gh, :gw], b[..., :gh, :gw]
+    scene_cfg = dataclasses.replace(cfg, window_h=gh + 2, window_w=gw + 2)
+    hist = cell_histograms(mag, b, scene_cfg)
+    return block_normalize(hist, scene_cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def score_map(gray: Array, w: Array, b: Array,
+              cfg: HOGConfig = PAPER_HOG) -> Array:
+    """Dense SVM score map at 8-px stride. gray: (H, W) -> (PH, PW).
+
+    score[i, j] = <blocks[i:i+15, j:j+7, :], W> + b  == valid conv.
+    """
+    blocks = scene_blocks(gray, cfg)                    # (BH, BW, 36)
+    bh, bw = cfg.blocks_hw                              # 15, 7
+    wk = w.reshape(bh, bw, cfg.block_dim)               # (15, 7, 36)
+    out = jax.lax.conv_general_dilated(
+        blocks[None],                                   # NHWC
+        wk[..., None],                                  # HWIO (36 -> 1)
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out[0, :, :, 0] + b
+
+
+def _nms(boxes: np.ndarray, scores: np.ndarray, iou_thr: float) -> List[int]:
+    """Greedy NMS on host. boxes: (N, 4) as (y0, x0, y1, x1)."""
+    order = np.argsort(-scores)
+    keep: List[int] = []
+    while order.size:
+        i = order[0]
+        keep.append(int(i))
+        if order.size == 1:
+            break
+        rest = order[1:]
+        yy0 = np.maximum(boxes[i, 0], boxes[rest, 0])
+        xx0 = np.maximum(boxes[i, 1], boxes[rest, 1])
+        yy1 = np.minimum(boxes[i, 2], boxes[rest, 2])
+        xx1 = np.minimum(boxes[i, 3], boxes[rest, 3])
+        inter = np.maximum(0, yy1 - yy0) * np.maximum(0, xx1 - xx0)
+        a_i = (boxes[i, 2] - boxes[i, 0]) * (boxes[i, 3] - boxes[i, 1])
+        a_r = (boxes[rest, 2] - boxes[rest, 0]) * (boxes[rest, 3] - boxes[rest, 1])
+        iou = inter / np.maximum(a_i + a_r - inter, 1e-9)
+        order = rest[iou <= iou_thr]
+    return keep
+
+
+def detect(image_rgb: Array, svm: SVMParams,
+           cfg: DetectorConfig = DetectorConfig()) -> List[dict]:
+    """Multi-scale detection. Returns [{box:(y0,x0,y1,x1), score, scale}]."""
+    gray = grayscale(jnp.asarray(image_rgb))
+    hh, ww = gray.shape
+    hcfg = cfg.hog
+    all_boxes, all_scores, all_scales = [], [], []
+    for s in cfg.scales:
+        sh, sw = int(hh * s), int(ww * s)
+        if sh < hcfg.window_h or sw < hcfg.window_w:
+            continue
+        g = jax.image.resize(gray, (sh, sw), "linear")
+        sm = np.asarray(score_map(g, svm["w"], svm["b"], hcfg))
+        ys, xs = np.where(sm > cfg.score_threshold)
+        for y, x in zip(ys, xs):
+            y0, x0 = y * hcfg.cell / s, x * hcfg.cell / s
+            all_boxes.append((y0, x0, y0 + hcfg.window_h / s,
+                              x0 + hcfg.window_w / s))
+            all_scores.append(sm[y, x])
+            all_scales.append(s)
+    if not all_boxes:
+        return []
+    boxes = np.asarray(all_boxes)
+    scores = np.asarray(all_scores)
+    keep = _nms(boxes, scores, cfg.nms_iou)
+    return [{"box": tuple(float(v) for v in boxes[i]),
+             "score": float(scores[i]), "scale": float(all_scales[i])}
+            for i in keep]

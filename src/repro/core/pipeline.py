@@ -1,0 +1,85 @@
+"""Batched detection pipeline -- the "co-processor" as a sharded service op.
+
+`classify_windows(params, windows)` is the TPU equivalent of the paper's
+Fig. 6 datapath: grayscale -> HOG -> SVM -> {0, 1}, for a BATCH of windows
+(the FPGA streams one window; the TPU streams a batch per grid step).
+
+Execution paths (all numerically cross-validated in tests):
+  * path="ref"     pure-jnp oracle (core/hog.py), mode per HOGConfig
+  * path="kernel"  Pallas kernels (kernels/ops.py): gradient+bin, cell
+                   histogram, block-norm, SVM matmul as separate kernels
+  * path="fused"   single fused Pallas kernel per window batch (the §Perf
+                   hillclimb artifact)
+
+`shard_over_data()` places a window batch across the 'data' axis of the
+production mesh -- detection is embarrassingly data-parallel, which is the
+co-processor scaling story at pod scale (see launch/dryrun.py --arch
+hog_svm_coproc).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hog import HOGConfig, PAPER_HOG, hog_descriptor
+from repro.core.svm import SVMParams, svm_score
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg", "path"))
+def extract_features(windows: Array, cfg: HOGConfig = PAPER_HOG,
+                     path: str = "ref") -> Array:
+    """(B, 130, 66, 3) uint8 -> (B, 3780) float32 descriptors."""
+    if path == "ref":
+        return hog_descriptor(windows, cfg)
+    if path == "kernel":
+        from repro.kernels import ops
+        return ops.hog_descriptor_kernel(windows, cfg)
+    if path == "fused":
+        from repro.kernels import ops
+        return ops.hog_descriptor_fused(windows, cfg)
+    raise ValueError(f"unknown path {path!r}")
+
+
+@partial(jax.jit, static_argnames=("cfg", "path"))
+def classify_windows(params: SVMParams, windows: Array,
+                     cfg: HOGConfig = PAPER_HOG, path: str = "ref") -> Dict[str, Array]:
+    """Full co-processor op: windows -> {score, human}. (Fig. 6 datapath.)"""
+    feats = extract_features(windows, cfg, path)
+    if path in ("kernel", "fused"):
+        from repro.kernels import ops
+        score = ops.svm_score_kernel(feats, params["w"], params["b"])
+    elif cfg.feat_dtype == "bf16":
+        # §Perf: bf16 descriptors AND weights on the wire, fp32 MXU
+        # accumulation -- otherwise XLA promotes the descriptor back to
+        # f32 before the dot and the down-cast is dead code
+        score = jax.lax.dot_general(
+            feats, params["w"].astype(jnp.bfloat16)[:, None],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0] + params["b"]
+    else:
+        score = svm_score(params, feats)
+    return {"score": score, "human": (score > 0).astype(jnp.int32)}
+
+
+def shard_over_data(mesh: Mesh, windows: Array) -> Array:
+    """Place a window batch on the mesh, batch over every data-like axis."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    spec = P(data_axes, *([None] * (windows.ndim - 1)))
+    return jax.device_put(windows, NamedSharding(mesh, spec))
+
+
+def detection_step_specs(mesh: Mesh):
+    """(in_shardings, out_shardings) for jit'ing classify_windows on a mesh."""
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    w_spec = {"w": NamedSharding(mesh, P(None)),
+              "b": NamedSharding(mesh, P())}
+    x_spec = NamedSharding(mesh, P(data_axes, None, None, None))
+    out_spec = {"score": NamedSharding(mesh, P(data_axes)),
+                "human": NamedSharding(mesh, P(data_axes))}
+    return (w_spec, x_spec), out_spec

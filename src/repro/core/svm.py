@@ -1,0 +1,119 @@
+"""Linear SVM -- training (in-framework, replacing the paper's Matlab step)
+and inference (eqs. 6-7).
+
+The paper trains W, b offline in Matlab and burns them into TrainedData_MEM;
+the hardware evaluates D(X) = sign(W.X + b). Here both halves live in the
+framework:
+
+  * `train_svm`      -- primal hinge-loss + L2, Pegasos-style SGD schedule
+                        (lr_t = 1/(lambda*t)), full-JAX `lax.scan` loop.
+  * `svm_score`      -- the co-processor op: scores = X @ W + b. The batched
+                        Pallas kernel lives in kernels/svm_matmul.py; this is
+                        its oracle.
+  * `predict`        -- sign thresholding per eq. (7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+SVMParams = Dict[str, Array]   # {"w": (F,), "b": ()}
+
+
+def init_svm(n_features: int, dtype=jnp.float32) -> SVMParams:
+    return {"w": jnp.zeros((n_features,), dtype), "b": jnp.zeros((), dtype)}
+
+
+def svm_score(params: SVMParams, x: Array) -> Array:
+    """D(x) = W.X + b  (eq. 6). x: (..., F) -> (...)."""
+    return x @ params["w"] + params["b"]
+
+
+def predict(params: SVMParams, x: Array) -> Array:
+    """sign(W.X + b) > 0 -> person (eq. 7). Returns int32 {0, 1}."""
+    return (svm_score(params, x) > 0).astype(jnp.int32)
+
+
+def hinge_loss(params: SVMParams, x: Array, y_pm1: Array,
+               lam: float, neg_weight: float = 1.0) -> Array:
+    """lambda/2 ||w||^2 + weighted mean(max(0, 1 - y * D(x))), y in {-1,+1}.
+
+    `neg_weight` re-weights the negative class -- used to counter the
+    paper's 4202/2795 train imbalance (class-weighted C-SVM).
+    """
+    margins = y_pm1 * svm_score(params, x)
+    w = jnp.where(y_pm1 < 0, neg_weight, 1.0)
+    data = jnp.sum(w * jnp.maximum(0.0, 1.0 - margins)) / jnp.sum(w)
+    reg = 0.5 * lam * jnp.sum(params["w"] * params["w"])
+    return data + reg
+
+
+@dataclasses.dataclass(frozen=True)
+class SVMTrainConfig:
+    steps: int = 2000
+    batch: int = 256
+    lam: float = 1e-4          # L2 strength (Pegasos lambda)
+    seed: int = 0
+    pegasos_lr: bool = True    # lr_t = 1/(lam * t); else constant 0.1
+    neg_weight: float = 1.0    # class weight for negatives (imbalance fix)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_svm(x: Array, y01: Array,
+              cfg: SVMTrainConfig = SVMTrainConfig()) -> Tuple[SVMParams, Array]:
+    """Train on features x (N, F), labels y01 (N,) in {0,1}.
+
+    Returns (params, loss_curve). Pure-JAX scan so the whole training run
+    is one compiled program (the "software training" half of the paper,
+    minus Matlab).
+    """
+    n, f = x.shape
+    y = (y01.astype(jnp.float32) * 2.0 - 1.0)
+    params = init_svm(f)
+    grad_fn = jax.grad(hinge_loss, argnums=0)
+
+    def step(carry, t):
+        params, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (cfg.batch,), 0, n)
+        xb, yb = x[idx], y[idx]
+        g = grad_fn(params, xb, yb, cfg.lam, cfg.neg_weight)
+        if cfg.pegasos_lr:
+            lr = 1.0 / (cfg.lam * (t.astype(jnp.float32) + 1.0))
+            lr = jnp.minimum(lr, 1.0)   # clip the huge first steps
+        else:
+            lr = 0.1
+        new = {"w": params["w"] - lr * g["w"], "b": params["b"] - lr * g["b"]}
+        loss = hinge_loss(new, xb, yb, cfg.lam)
+        return (new, key), loss
+
+    (params, _), losses = jax.lax.scan(
+        step, (params, jax.random.PRNGKey(cfg.seed)),
+        jnp.arange(cfg.steps))
+    return params, losses
+
+
+def accuracy_table(params: SVMParams, x: Array, y01: Array) -> Dict[str, float]:
+    """Reproduces the paper's Table I layout: per-class + total accuracy."""
+    pred = predict(params, x)
+    y01 = y01.astype(jnp.int32)
+    pos = y01 == 1
+    neg = y01 == 0
+    tp = jnp.sum((pred == 1) & pos)
+    tn = jnp.sum((pred == 0) & neg)
+    n_pos = jnp.maximum(jnp.sum(pos), 1)
+    n_neg = jnp.maximum(jnp.sum(neg), 1)
+    return {
+        "with_person_acc": float(tp / n_pos),
+        "without_person_acc": float(tn / n_neg),
+        "total_acc": float((tp + tn) / y01.shape[0]),
+        "true_detection": int(tp + tn),
+        "n": int(y01.shape[0]),
+        "n_pos": int(jnp.sum(pos)),
+        "n_neg": int(jnp.sum(neg)),
+    }

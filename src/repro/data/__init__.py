@@ -1,0 +1,1 @@
+from repro.data.synth_pedestrian import PedestrianDataConfig, make_dataset

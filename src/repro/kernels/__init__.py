@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot-spots (HOG + SVM), each
+# with a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+from repro.kernels.hog_gradient import hog_gradient
+from repro.kernels.cell_hist import cell_hist
+from repro.kernels.block_norm import block_norm
+from repro.kernels.svm_matmul import svm_scores
+from repro.kernels.fused_hog import fused_hog
+from repro.kernels.flash_attention import flash_attention

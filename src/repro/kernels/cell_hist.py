@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: per-cell orientation histograms (HOG stage 3b).
+
+Input : mag (B, Ha, Wa) f32, bin (B, Ha, Wa) int32    (paper: 128 x 64)
+Output: hist (B, ch, cw, 9) f32                        (paper: 16 x 8 x 9)
+
+TPU adaptation of the paper's BRAM accumulate-per-bin pipeline: the
+scatter "hist[bin] += mag" serializes on TPU, so the accumulation is
+re-expressed as a dense one-hot contraction,
+
+    hist[c, b] = sum_px mag[c, px] * [bin[c, px] == b]
+
+which the compiler maps onto vector selects + tree reductions (and, in
+the fused kernel, onto an MXU matmul over the 64-px cell axis). This is
+the "adder tree in space, not time" translation (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+
+
+def _kernel(mag_ref, bin_ref, hist_ref, *, cell: int, bins: int):
+    mag = mag_ref[...]                               # (TB, Ha, Wa)
+    bi = bin_ref[...]
+    tb, ha, wa = mag.shape
+    ch, cw = ha // cell, wa // cell
+    # (TB, ch, py, cw, px)
+    m = mag.reshape(tb, ch, cell, cw, cell)
+    b = bi.reshape(tb, ch, cell, cw, cell)
+    acc = jnp.zeros((tb, ch, cw, bins), jnp.float32)
+    for k in range(bins):                            # bins is static (9)
+        sel = jnp.where(b == k, m, 0.0)
+        acc = acc.at[..., k].set(jnp.sum(sel, axis=(2, 4)))
+    hist_ref[...] = acc
+
+
+@partial(jax.jit, static_argnames=("cell", "bins", "block_b", "interpret"))
+def cell_hist(mag: jax.Array, bin_idx: jax.Array, cell: int = 8,
+              bins: int = 9, block_b: int = 8,
+              interpret: bool = INTERPRET) -> jax.Array:
+    B, Ha, Wa = mag.shape
+    ch, cw = Ha // cell, Wa // cell
+    tb = min(block_b, B)
+    return pl.pallas_call(
+        partial(_kernel, cell=cell, bins=bins),
+        grid=(cdiv(B, tb),),
+        in_specs=[
+            pl.BlockSpec((tb, Ha, Wa), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, Ha, Wa), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ch, cw, bins), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, ch, cw, bins), jnp.float32),
+        interpret=interpret,
+    )(mag, bin_idx)

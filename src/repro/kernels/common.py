@@ -1,0 +1,22 @@
+"""Shared Pallas kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+# TPU is the compile target; this container is CPU-only, so kernels are
+# validated with the Pallas interpreter (executes the kernel body in
+# Python with the same BlockSpec pipeline semantics).
+INTERPRET = jax.default_backend() == "cpu"
+
+# v5e geometry the BlockSpecs are sized for
+VMEM_BYTES = 128 * 1024 * 1024   # 128 MiB VMEM per core (v5e: 128MB unified)
+LANE = 128                       # vector lane width / MXU tile edge
+SUBLANE = 8                      # f32 sublane height
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: FUSED HOG window pipeline (stages 3-6 in one kernel).
+
+Input : gray (B, 130, 66) f32
+Output: descriptors (B, 3780) f32
+
+This is the beyond-paper §Perf artifact. The staged kernels round-trip
+(B,128,64) magnitude/bin and (B,16,8,9) histograms through HBM between
+pallas_calls; per window that is ~98 KB of intermediate traffic for a
+15 KB descriptor. Fusing the whole chain keeps every intermediate in
+VMEM: HBM traffic drops to 34 KB in + 15 KB out per window (~3.5x less),
+and the pipeline becomes compute-bound on the VPU -- mirroring how the
+paper's FPGA streams cell data through BUFFER_HOG_PRENORM without ever
+leaving on-chip BRAM. That correspondence (BRAM dataflow == VMEM fusion)
+is the paper's core insight mapped to TPU (DESIGN.md §2).
+
+The SVM dot product could fuse here too; it is kept separate because the
+weight tile is shared across the whole batch and the MXU matmul in
+svm_matmul.py already runs at roofline for F=3780.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.hog_gradient import _mag_bin_sector, _mag_bin_cordic
+from repro.kernels.block_norm import _nr_rsqrt
+
+
+def _kernel(gray_ref, desc_ref, *, cell: int, block: int, bins: int,
+            eps: float, mode: str):
+    g = gray_ref[...]                                    # (TB, H, W)
+    fx = g[:, 1:-1, 2:] - g[:, 1:-1, :-2]
+    fy = g[:, 2:, 1:-1] - g[:, :-2, 1:-1]
+    tb, ha, wa = fx.shape
+    ha = (ha // cell) * cell
+    wa = (wa // cell) * cell
+    fx, fy = fx[:, :ha, :wa], fy[:, :ha, :wa]
+    if mode == "sector":
+        mag, b = _mag_bin_sector(fx, fy)
+    else:
+        mag, b = _mag_bin_cordic(fx, fy)
+
+    ch, cw = ha // cell, wa // cell
+    m = mag.reshape(tb, ch, cell, cw, cell)
+    bi = b.reshape(tb, ch, cell, cw, cell)
+    hist = jnp.zeros((tb, ch, cw, bins), jnp.float32)
+    for k in range(bins):
+        hist = hist.at[..., k].set(
+            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(2, 4)))
+
+    bh, bw = ch - block + 1, cw - block + 1
+    parts = [hist[:, i:i + bh, j:j + bw, :]
+             for i in range(block) for j in range(block)]
+    v = jnp.concatenate(parts, axis=-1)                  # (TB, bh, bw, 36)
+    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
+    inv = _nr_rsqrt(ss) if mode == "cordic" else jax.lax.rsqrt(ss)
+    v = v * inv
+    desc_ref[...] = v.reshape(tb, bh * bw * block * block * bins)
+
+
+@partial(jax.jit, static_argnames=("cell", "block", "bins", "eps", "mode",
+                                   "block_b", "interpret"))
+def fused_hog(gray: jax.Array, cell: int = 8, block: int = 2, bins: int = 9,
+              eps: float = 1e-2, mode: str = "sector", block_b: int = 8,
+              interpret: bool = INTERPRET) -> jax.Array:
+    B, H, W = gray.shape
+    ha = ((H - 2) // cell) * cell
+    wa = ((W - 2) // cell) * cell
+    ch, cw = ha // cell, wa // cell
+    bh, bw = ch - block + 1, cw - block + 1
+    nf = bh * bw * block * block * bins
+    tb = min(block_b, B)
+    return pl.pallas_call(
+        partial(_kernel, cell=cell, block=block, bins=bins, eps=eps,
+                mode=mode),
+        grid=(cdiv(B, tb),),
+        in_specs=[pl.BlockSpec((tb, H, W), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tb, nf), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nf), jnp.float32),
+        interpret=interpret,
+    )(gray)

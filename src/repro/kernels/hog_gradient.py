@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: gradient + magnitude + orientation-bin (HOG stage 3).
+
+Input : gray windows (B, H, W) float32   (paper: H=130, W=66)
+Output: magnitude   (B, H-2, W-2) float32
+        bin index   (B, H-2, W-2) int32  (9 unsigned-orientation bins)
+
+Adaptation of the paper's CORDIC stage (Figs. 7-8) to the TPU VPU:
+  * mode="sector": the classifier consumes only the BIN, so the angle is
+    never materialized -- 8 cross-multiplication boundary tests replace
+    the 15-iteration CORDIC rotation (see DESIGN.md §2). No trig, no
+    division, branch-free: pure VPU mul/cmp/add.
+  * mode="cordic": the faithful datapath -- 15 LUT-driven shift-add
+    rotations, gain-corrected magnitude, then binning. Kept as the
+    validation mode for the paper's numerics.
+
+Grid: one program per TB-window slab; W sits in the lane dimension
+(66 -> 128 lane padding; the fused kernel in fused_hog.py repacks to
+recover this, see §Perf).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cordic import ATAN_LUT_DEG, cordic_gain
+from repro.kernels.common import INTERPRET, cdiv
+
+_BOUNDARIES = tuple((math.cos(math.radians(20.0 * (k + 1))),
+                     math.sin(math.radians(20.0 * (k + 1))))
+                    for k in range(8))
+
+
+def _mag_bin_sector(fx, fy):
+    mag = jnp.sqrt(fx * fx + fy * fy)
+    flip = fy < 0
+    ux = jnp.where(flip, -fx, fx)
+    uy = jnp.where(flip, -fy, fy)
+    on_axis = (uy == 0) & (ux < 0)
+    ux = jnp.where(on_axis, -ux, ux)
+    b = jnp.zeros(fx.shape, jnp.int32)
+    for cb, sb in _BOUNDARIES:
+        b += ((uy * cb - ux * sb) >= 0.0).astype(jnp.int32)
+    return mag, b
+
+
+def _mag_bin_cordic(fx, fy, iters: int = 15):
+    neg_x = fx < 0
+    x0 = jnp.where(neg_x, -fx, fx)
+    y0 = jnp.where(neg_x, -fy, fy)
+    z0 = jnp.zeros_like(fx)
+    x, y, z = x0, y0, z0
+    for i in range(iters):                       # fixed-depth HW pipeline
+        p = 2.0 ** (-i)
+        d = jnp.where(y < 0, -1.0, 1.0)
+        x, y, z = x + d * y * p, y - d * x * p, z + d * ATAN_LUT_DEG[i]
+    mag = x * (1.0 / cordic_gain(iters))
+    ang = jnp.where(neg_x, jnp.where(fy >= 0, z + 180.0, z - 180.0), z)
+    both_zero = (fx == 0) & (fy == 0)
+    mag = jnp.where(both_zero, 0.0, mag)
+    ang = jnp.where(both_zero, 0.0, ang)
+    theta = jnp.mod(ang, 180.0)
+    b = jnp.clip(jnp.floor(theta / 20.0), 0, 8).astype(jnp.int32)
+    return mag, b
+
+
+def _kernel(gray_ref, mag_ref, bin_ref, *, mode: str):
+    g = gray_ref[...]                            # (TB, H, W)
+    fx = g[:, 1:-1, 2:] - g[:, 1:-1, :-2]        # eq. (1)
+    fy = g[:, 2:, 1:-1] - g[:, :-2, 1:-1]        # eq. (2)
+    if mode == "sector":
+        mag, b = _mag_bin_sector(fx, fy)
+    else:
+        mag, b = _mag_bin_cordic(fx, fy)
+    mag_ref[...] = mag
+    bin_ref[...] = b
+
+
+@partial(jax.jit, static_argnames=("mode", "block_b", "interpret"))
+def hog_gradient(gray: jax.Array, mode: str = "sector",
+                 block_b: int = 8, interpret: bool = INTERPRET):
+    """(B, H, W) f32 -> (mag, bin) each (B, H-2, W-2)."""
+    B, H, W = gray.shape
+    tb = min(block_b, B)
+    grid = (cdiv(B, tb),)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, H - 2, W - 2), jnp.float32),
+        jax.ShapeDtypeStruct((B, H - 2, W - 2), jnp.int32),
+    )
+    return pl.pallas_call(
+        partial(_kernel, mode=mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, H, W), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((tb, H - 2, W - 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, H - 2, W - 2), lambda i: (i, 0, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(gray)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These delegate to repro.core.hog -- the software pipeline IS the oracle,
+exactly as the paper validates its ModelSim waveforms against the Matlab
+implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hog as H
+from repro.core.svm import svm_score
+
+
+def hog_gradient_ref(gray, mode: str = "sector"):
+    fx, fy = H.gradients(gray.astype(jnp.float32))
+    return H._MAG_BIN[mode](fx, fy, 9)
+
+
+def cell_hist_ref(mag, bin_idx, cell: int = 8, bins: int = 9):
+    B, Ha, Wa = mag.shape
+    cfg = dataclasses.replace(H.PAPER_HOG, window_h=Ha + 2, window_w=Wa + 2,
+                              cell=cell, bins=bins)
+    return H.cell_histograms(mag, bin_idx, cfg)
+
+
+def block_norm_ref(hist, block: int = 2, eps: float = 1e-2,
+                   mode: str = "rsqrt"):
+    B, ch, cw, bins = hist.shape
+    cfg = dataclasses.replace(H.PAPER_HOG, window_h=ch * 8 + 2,
+                              window_w=cw * 8 + 2, block=block, bins=bins,
+                              eps=eps)
+    return H.block_normalize(hist, cfg, use_nr=(mode == "nr"))
+
+
+def svm_scores_ref(feats, w, bias):
+    return svm_score({"w": w, "b": bias}, feats)
+
+
+def fused_hog_ref(gray, mode: str = "sector"):
+    B, Hh, Ww = gray.shape
+    cfg = dataclasses.replace(H.PAPER_HOG, window_h=Hh, window_w=Ww,
+                              mode=mode)
+    return H.hog_descriptor(gray, cfg)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle for kernels/flash_attention.py: masked softmax attention.
+    q: (B,H,S,hd); k,v: (B,K,S,hd) GQA."""
+    B, H, S, hd = q.shape
+    rep = H // k.shape[1]
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(hd).astype(q.dtype)
+    if causal:
+        m = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(m, s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), -1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vv)

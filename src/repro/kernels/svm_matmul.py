@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: batched linear-SVM scoring (eq. 6, SVMCLASSIFY block).
+
+Input : feats (B, F) f32, w (F,) f32, b () f32     (paper: F = 3780)
+Output: scores (B,) f32
+
+The FPGA evaluates W.X serially (one MAC per cycle); the TPU evaluates a
+(TB, TF) x (TF, 1) matmul per grid step on the MXU. F = 3780 is padded to
+3840 = 30*128 so every K tile is lane-aligned; the K grid dimension
+accumulates partial products into the output block (revisited-block
+accumulation, the canonical Pallas matmul pattern).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv, round_up, LANE
+
+
+def _kernel(x_ref, w_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                                  # (TB, TF)
+    w = w_ref[...]                                  # (TF, 1)
+    out_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (TB, 1) on the MXU
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_f", "interpret"))
+def svm_scores(feats: jax.Array, w: jax.Array, bias: jax.Array,
+               block_b: int = 128, block_f: int = 512,
+               interpret: bool = INTERPRET) -> jax.Array:
+    B, F = feats.shape
+    Bp = round_up(B, 8)
+    tb = min(block_b, Bp)
+    tf = min(block_f, round_up(F, LANE))
+    # every K tile must be in-bounds: pad F to a multiple of the K tile
+    # (zero padding contributes exactly 0 to the accumulation)
+    Fp = round_up(F, tf)
+    feats = jnp.pad(feats, ((0, Bp - B), (0, Fp - F)))
+    wp = jnp.pad(w, (0, Fp - F)) if Fp != F else w
+    out = pl.pallas_call(
+        _kernel,
+        grid=(cdiv(Bp, tb), cdiv(Fp, tf)),
+        in_specs=[
+            pl.BlockSpec((tb, tf), lambda i, k: (i, k)),
+            pl.BlockSpec((tf, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(feats, wp.reshape(Fp, 1))
+    return out[:B, 0] + bias

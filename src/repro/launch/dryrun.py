@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Only the dry-run sees 512 host devices.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import hlo_parse, roofline  # noqa: E402
+from repro.configs import (ARCH_IDS, SHAPE_BY_NAME, SHAPES, get_config,
+                           input_specs, shape_applicable)  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.configs import ModelConfig  # noqa: E402
+from repro.models.model import (decode_step, init_cache, prefill)  # noqa: E402
+from repro.sharding.rules import (PROFILES, batch_specs, cache_specs_tree,
+                                  dp_axes, fit_tree, make_ctx,
+                                  param_specs)  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+from repro.train.train_step import (init_train_state, jit_train_step,
+                                    state_shardings)  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               profile_name: str = "baseline", smoke: bool = False):
+    """Build + lower + compile one (arch x shape x mesh) cell.
+
+    Returns (compiled, lowered, cfg, n_chips)."""
+    profile = PROFILES[profile_name]
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    if arch == "hog_svm_coproc":
+        return _lower_hog(mesh, shape, smoke, profile_name), mesh
+
+    cfg = get_config(arch, smoke=smoke)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(reason)
+
+    from repro.models.model import init_params
+    specs = input_specs(cfg, shape, smoke=smoke)
+    b_specs = {k: v for k, v in
+               batch_specs(cfg, mesh, shape.kind, profile).items()
+               if k in specs}
+    b_specs = fit_tree(b_specs, specs, mesh)
+    b_sh = {k: NamedSharding(mesh, b_specs[k]) for k in specs}
+
+    def fitted_param_sh(params_shape):
+        ps = fit_tree(param_specs(params_shape, cfg), params_shape, mesh)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), ps,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(
+            partial(init_train_state, cfg), jax.random.PRNGKey(0))
+        jitted = jit_train_step(cfg, OptConfig(), mesh, state_shape,
+                                specs, profile=profile)
+        lowered = jitted.lower(state_shape, specs)
+    elif shape.kind == "prefill":
+        params_shape = jax.eval_shape(partial(init_params, cfg),
+                                      jax.random.PRNGKey(0))
+        p_sh = fitted_param_sh(params_shape)
+        ctx = make_ctx(mesh, profile=profile)
+        fn = partial(prefill, cfg=cfg, max_len=shape.seq_len, ctx=ctx)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params_shape, specs)
+    else:  # decode
+        params_shape = jax.eval_shape(partial(init_params, cfg),
+                                      jax.random.PRNGKey(0))
+        p_sh = fitted_param_sh(params_shape)
+        B = 4 if smoke else shape.global_batch
+        S = 64 if smoke else shape.seq_len
+        cache_shape = jax.eval_shape(partial(init_cache, cfg, B, S))
+        c_specs = fit_tree(cache_specs_tree(cfg, mesh, profile),
+                           cache_shape, mesh)
+        c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        import dataclasses as _dc
+        ctx = _dc.replace(make_ctx(mesh, profile=profile),
+                          seq_sharded=False)
+        enc_sh = None
+        if cfg.encoder_layers:
+            enc_sh = NamedSharding(mesh, P(dp_axes(mesh), None, None))
+
+            def fn(params, token, cache, enc_states):
+                return decode_step(params, token, cache, cfg, ctx,
+                                   enc=enc_states)
+            jitted = jax.jit(fn, in_shardings=(
+                p_sh, b_sh["token"], c_sh, enc_sh), donate_argnums=(2,))
+            lowered = jitted.lower(params_shape, specs["token"],
+                                   cache_shape, specs["enc_states"])
+        else:
+            def fn(params, token, cache):
+                return decode_step(params, token, cache, cfg, ctx)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["token"], c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shape, specs["token"],
+                                   cache_shape)
+    return (lowered, cfg), mesh
+
+
+def _lower_hog(mesh, shape, smoke, profile_name="baseline"):
+    """The paper's co-processor at pod scale: batched window detection,
+    data-parallel over every non-model axis."""
+    import dataclasses as _dc
+    from repro.core.hog import PAPER_HOG
+    from repro.core.pipeline import classify_windows
+    hog_cfg = (PAPER_HOG if profile_name == "baseline"
+               else _dc.replace(PAPER_HOG, feat_dtype="bf16"))
+    B = 64 if smoke else 16384 * (mesh.size // 256)
+    dp = dp_axes(mesh)
+    w_sh = {"w": NamedSharding(mesh, P(None)),
+            "b": NamedSharding(mesh, P())}
+    x_sh = NamedSharding(mesh, P(dp, None, None, None))
+    params = {"w": jax.ShapeDtypeStruct((3780,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((), jnp.float32)}
+    wins = jax.ShapeDtypeStruct((B, 130, 66, 3), jnp.uint8)
+    fn = partial(classify_windows, cfg=hog_cfg, path="ref")
+    jitted = jax.jit(fn, in_shardings=(w_sh, x_sh))
+    lowered = jitted.lower(params, wins)
+
+    class _Cfg:  # roofline hooks for the non-LM workload
+        name = "hog_svm_coproc"
+        n_layers = 1
+
+        @staticmethod
+        def param_count(active_only=False):
+            return 3781
+    return (lowered, _Cfg)
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "baseline", smoke: bool = False) -> dict:
+    t0 = time.time()
+    shape = SHAPE_BY_NAME[shape_name]
+    (lowered, cfg), mesh = lower_cell(arch, shape_name, multi_pod,
+                                      profile, smoke)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    agg = hlo_parse.aggregate(hlo, layer_hint=cfg.n_layers)
+    n_chips = mesh.size
+    mf = (roofline.model_flops(cfg, shape, n_chips)
+          if arch != "hog_svm_coproc" else 0.0)
+    rl = roofline.Roofline(
+        name=f"{arch}/{shape_name}/{'multi' if multi_pod else 'single'}",
+        flops_dev=agg["flops"], mem_bytes_dev=agg["mem_bytes"],
+        coll_bytes_dev=agg["coll_bytes"], model_flops_dev=mf,
+        cost_flops=float(cost.get("flops", 0.0)),
+        cost_bytes=float(cost.get("bytes accessed", 0.0)))
+    row = rl.row()
+    row.update({
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "profile": profile, "smoke": smoke,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "coll_detail": {k.split("/", 1)[1]: v for k, v in agg.items()
+                        if k.startswith("coll/")},
+        "cost_flops_raw": float(cost.get("flops", 0.0)),
+        "status": "ok",
+    })
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id or 'all' (default: all + hog_svm_coproc)")
+    ap.add_argument("--shape", default=None,
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--profile", default="baseline",
+                    choices=list(PROFILES.keys()))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already in --out")
+    args = ap.parse_args()
+
+    archs = ([args.arch] if args.arch and args.arch != "all"
+             else list(ARCH_IDS) + ["hog_svm_coproc"])
+    shapes = ([args.shape] if args.shape and args.shape != "all"
+              else [s.name for s in SHAPES])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape_name in shapes:
+            if arch == "hog_svm_coproc" and shape_name != "train_4k":
+                continue   # coproc has one canonical detection shape
+            for mp in meshes:
+                key = (f"{arch}|{shape_name}|{'multi' if mp else 'single'}"
+                       f"|{args.profile}")
+                if args.resume and key in results and \
+                        results[key].get("status") in ("ok", "skip"):
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    row = run_cell(arch, shape_name, mp, args.profile,
+                                   args.smoke)
+                    print(f"  ok: compile={row['compile_s']}s "
+                          f"bottleneck={row['bottleneck']} "
+                          f"step={row['step_time_s']:.4f}s "
+                          f"peak={row['mem']['peak_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                except SkipCell as e:
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "profile": args.profile,
+                           "status": "skip", "reason": str(e)}
+                    print(f"  skip: {e}", flush=True)
+                except Exception as e:
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "profile": args.profile,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"  ERROR: {e!r}", flush=True)
+                results[key] = row
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                jax.clear_caches()   # keep host RSS flat across 80 cells
+                import gc
+                gc.collect()
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skip")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

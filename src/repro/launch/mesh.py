@@ -1,0 +1,30 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state -- required because the dry-run forces 512
+host devices via XLA_FLAGS before any jax init, while tests/benches must
+see a single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Axes: ('pod',) 'data', 'model' -- see DESIGN.md §5. The 'pod' axis
+    carries only gradient all-reduces / pipeline hops (slow inter-pod
+    links); 'data' is FSDP + batch; 'model' is TP/EP/SP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = n // model
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))

@@ -1,0 +1,4 @@
+from repro.models.configs import ModelConfig
+from repro.models.model import (init_params, forward, loss_fn, prefill,
+                                decode_step, init_cache)
+from repro.models.moe import ShardingCtx

@@ -1,0 +1,425 @@
+"""Attention: GQA, qk-norm, RoPE / M-RoPE, sliding window, meta-token sinks,
+cross-attention, and KV-cache decode. Pure einsum formulations (GSPMD-
+friendly: the compiler shards heads / sequence / batch per sharding rules).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -1e9  # bf16-safe mask value (bf16 min normal ~ -3.4e38, but
+                # -1e9 survives fp32 softmax subtraction cleanly)
+
+
+def _project_qkv(x: Array, p: Params, cfg: ModelConfig,
+                 positions: Array) -> Tuple[Array, Array, Array]:
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x,
+                   p["wq"].reshape(D, cfg.n_heads, hd))
+    k = jnp.einsum("bsd,dhk->bshk", x,
+                   p["wk"].reshape(D, cfg.n_kv_heads, hd))
+    v = jnp.einsum("bsd,dhk->bshk", x,
+                   p["wv"].reshape(D, cfg.n_kv_heads, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def make_mask(q_pos: Array, k_pos: Array, *, causal: bool,
+              window: int = 0, n_meta: int = 0) -> Array:
+    """Boolean mask (..., Sq, Sk): True = attend.
+
+    `window` > 0 restricts to the last `window` keys; the first `n_meta`
+    keys (hymba meta tokens) stay always-visible (attention sinks).
+    """
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        m &= dk <= dq
+    if window > 0:
+        in_window = dk > dq - window
+        is_meta = dk < n_meta
+        m &= in_window | is_meta
+    return m
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array],
+          cfg: ModelConfig, ctx=None) -> Array:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H = K * rep.
+    Softmax in fp32 (the paper's lesson on fp32 datapaths applies here).
+
+    Sharding (ctx != None): context-parallel -- queries stay sharded on
+    Sq over the tp axis, K/V are all-gathered over the sequence (GQA K/V
+    are small), scores are Sq-sharded. Pinning these is essential: left
+    alone, GSPMD pads kv-heads to the tp size and replicates batch.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    if ctx is not None and Sq > 1:
+        q = ctx.act_q(q)
+        k = ctx.act_kv_gathered(k)
+        v = ctx.act_kv_gathered(v)
+    q = q.reshape(B, Sq, K, rep, hd)
+    if (ctx is not None and getattr(ctx, "flash_vjp", False)
+            and Sq > 1 and mask is not None):
+        out = sdpa_flash(q, k, v, mask, hd ** -0.5)
+        out = out.reshape(B, Sq, H, hd)
+        if ctx is not None and Sq > 1:
+            out = ctx.act_q(out)
+        return out
+    if ctx is not None and ctx.bf16_scores:
+        # §Perf "flash-width" path: every materialized S x S tensor is
+        # bf16; softmax statistics stay fp32 INSIDE fusions (the sub/exp
+        # chain fuses, so only the bf16 results cross HBM) -- the XLA
+        # analogue of keeping fp32 only in a flash kernel's registers.
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", q, k,
+                            preferred_element_type=jnp.bfloat16)
+        if ctx is not None and Sq > 1:
+            scores = ctx.act_scores(scores)
+        scores = scores * jnp.bfloat16(hd ** -0.5)
+        if mask is not None:
+            scores = jnp.where(mask[:, None, None, :, :], scores,
+                               jnp.bfloat16(-3e4))
+        # bf16 max is exact (order-preserving); exp/sum accumulate fp32
+        # inside fusions/reductions -- no f32 S x S copy crosses HBM
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.exp((scores - m).astype(jnp.float32)).astype(jnp.bfloat16)
+        l = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+        w = (p / l.astype(jnp.bfloat16)).astype(v.dtype)
+        if ctx is not None and Sq > 1:
+            w = ctx.act_scores(w)
+    else:
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", q, k).astype(jnp.float32)
+        if ctx is not None and Sq > 1:
+            scores = ctx.act_scores(scores)
+        scores *= hd ** -0.5
+        if mask is not None:
+            scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        if ctx is not None and Sq > 1:
+            w = ctx.act_scores(w)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w, v)
+    out = out.reshape(B, Sq, H, hd)
+    if ctx is not None and Sq > 1:
+        out = ctx.act_q(out)
+    return out
+
+
+def attention(x: Array, p: Params, cfg: ModelConfig, positions: Array,
+              *, window: int = 0, n_meta: int = 0,
+              causal: bool = True, ctx=None) -> Array:
+    """Full-sequence attention (training / prefill without cache)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    mask = make_mask(pos1d, pos1d, causal=causal, window=window,
+                     n_meta=n_meta)
+    out = _sdpa(q, k, v, mask, cfg, ctx)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      p["wo"].reshape(cfg.n_heads, cfg.hd, D))
+
+
+def attention_decode(x: Array, p: Params, cfg: ModelConfig,
+                     cache: Dict[str, Array], positions: Array,
+                     *, window: int = 0, n_meta: int = 0
+                     ) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); cache: {"k","v": (B, Smax, K, hd), "idx": ()} -- `idx`
+    is the current length (same for the whole batch; continuous-batching
+    engines pass per-slot lengths via positions).
+    """
+    B, _, D = x.shape
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions)
+    idx = cache["idx"]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    Smax = k.shape[1]
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    k_pos = jnp.arange(Smax)[None, :]                   # (1, Smax)
+    q_pos = pos1d[:, -1:]                               # (B, 1)
+    mask = make_mask(q_pos, k_pos, causal=True, window=window,
+                     n_meta=n_meta)
+    out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out,
+                   p["wo"].reshape(cfg.n_heads, cfg.hd, D))
+    return y, {"k": k, "v": v, "idx": idx + 1}
+
+
+def cross_attention(x: Array, enc: Array, p: Params,
+                    cfg: ModelConfig) -> Array:
+    """Decoder cross-attention over encoder states (whisper). No RoPE."""
+    B, S, D = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(D, cfg.n_heads, hd))
+    k = jnp.einsum("bsd,dhk->bshk", enc,
+                   p["wk"].reshape(D, cfg.n_kv_heads, hd))
+    v = jnp.einsum("bsd,dhk->bshk", enc,
+                   p["wv"].reshape(D, cfg.n_kv_heads, hd))
+    out = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      p["wo"].reshape(cfg.n_heads, hd, D))
+
+
+def _sdpa_lse(q: Array, k: Array, v: Array, mask: Optional[Array],
+              bf16: bool, ctx=None) -> Tuple[Array, Array]:
+    """SDPA returning (normalized out (B,Sq,H,hd), lse (B,Sq,H)) for
+    split-softmax merging (flash-style partial attention).
+
+    bf16 mode keeps every materialized (Sq, Sk) tensor at 2 bytes; the
+    max is taken in bf16 (exact: max is order-preserving under rounding)
+    and exp/sum accumulate in f32 INSIDE fusions/reductions so no f32
+    copy of the score tensor ever crosses HBM.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    q5 = q.reshape(B, Sq, K, rep, hd)
+    pt = jnp.bfloat16 if bf16 else jnp.float32
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", q5, k,
+                        preferred_element_type=pt)
+    if ctx is not None:
+        scores = ctx.constrain(scores, ctx.dp_axes, None, None,
+                               ctx.tp_axis, None)
+    scores = scores * jnp.asarray(hd ** -0.5, pt)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores,
+                           jnp.asarray(-3e4, pt))
+    m = jnp.max(scores, axis=-1).astype(jnp.float32)          # (B,K,rep,Sq)
+    p = jnp.exp((scores - m[..., None].astype(pt)).astype(jnp.float32)
+                ).astype(v.dtype)
+    l = jnp.sum(p, axis=-1, dtype=jnp.float32)                # (B,K,rep,Sq)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", p, v).reshape(B, Sq, H, hd)
+    out = out / jnp.moveaxis(jnp.maximum(l, 1e-30).reshape(B, H, Sq), 1,
+                             2)[..., None].astype(out.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))                  # (B,K,rep,Sq)
+    lse = jnp.moveaxis(lse.reshape(B, H, Sq), 1, 2)           # (B,Sq,H)
+    return out, lse
+
+
+def banded_attention(x: Array, p: Params, cfg: ModelConfig,
+                     positions: Array, *, window: int, n_meta: int = 0,
+                     ctx=None) -> Array:
+    """§Perf: block-banded sliding-window attention.
+
+    The baseline computes full S x S scores then masks -- O(S^2) HBM
+    traffic and FLOPs even though each query sees only `window` keys
+    (+ meta-token sinks). Here the sequence is reshaped into blocks of
+    size bq == window; block i attends to the key band [block i-1 ;
+    block i] (covers every in-window key), and separately to the meta
+    prefix; the two partial softmaxes merge by log-sum-exp. Traffic and
+    FLOPs drop from O(S^2) to O(S * (2*window + n_meta)) -- ~16x for
+    hymba prefill_32k. Fully vectorized (the block axis is the sequence
+    axis, so sequence sharding is preserved). Numerically equivalent to
+    the masked baseline (tests/test_banded.py).
+    """
+    B, S, D = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    out = banded_core(q, k, v, pos1d, cfg, window=window, n_meta=n_meta,
+                      ctx=ctx)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      p["wo"].reshape(cfg.n_heads, cfg.hd, D))
+
+
+def banded_core(q: Array, k: Array, v: Array, pos1d: Array,
+                cfg: ModelConfig, *, window: int, n_meta: int = 0,
+                ctx=None) -> Array:
+    """Banded attention on projected q/k/v -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    if ctx is not None:
+        # gather the sequence axis BEFORE folding into blocks: the
+        # (B, S) -> (B*nblk, bq) reshape across a sharded S triggers
+        # XLA's "involuntary full rematerialization" (replicate+repart).
+        # After this, the fold is device-local; the folded constraints
+        # below re-introduce 2D parallelism (rows over dp, bq over tp).
+        q = ctx.constrain(q, ctx.dp_axes, None, None, None)
+        k = ctx.constrain(k, ctx.dp_axes, None, None, None)
+        v = ctx.constrain(v, ctx.dp_axes, None, None, None)
+    bq = window
+    nblk = -(-S // bq)
+    Sp = nblk * bq
+    if Sp != S:
+        pad4 = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q = jnp.pad(q, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        pos1d = jnp.pad(pos1d, ((0, 0), (0, Sp - S)),
+                        constant_values=2 ** 30)
+    def blocks(t):  # (B, Sp, ...) -> (B*nblk, bq, ...)
+        return t.reshape((B * nblk, bq) + t.shape[2:])
+
+    def bands(t):   # (B, Sp, ...) -> (B*nblk, 2bq, ...): [prev; cur]
+        tb = t.reshape((B, nblk, bq) + t.shape[2:])
+        prev = jnp.pad(tb, ((0, 0), (1, 0)) + ((0, 0),) * (tb.ndim - 2)
+                       )[:, :-1]
+        band = jnp.concatenate([prev, tb], axis=2)
+        return band.reshape((B * nblk, 2 * bq) + t.shape[2:])
+
+    qb, kb, vb = blocks(q), bands(k), bands(v)
+    if ctx is not None:
+        # folded (B*nblk) rows shard over dp; query positions over tp.
+        # Without these pins GSPMD replicates the folded tensors
+        # (observed: 139 GiB/device on hymba train_4k).
+        qb = ctx.constrain(qb, ctx.dp_axes, ctx.tp_axis, None, None)
+        kb = ctx.constrain(kb, ctx.dp_axes, None, None, None)
+        vb = ctx.constrain(vb, ctx.dp_axes, None, None, None)
+    qp = blocks(pos1d[..., None])[..., 0]
+    kp = bands(pos1d[..., None])[..., 0]
+    # block 0's zero-padded "previous" band must never be attended
+    first_pad = (jnp.arange(B * nblk) % nblk == 0)[:, None] \
+        & (jnp.arange(2 * bq) < bq)[None, :]
+    kp = jnp.where(first_pad, 2 ** 30, kp)
+    mask = make_mask(qp, kp, causal=True, window=window)
+    if n_meta:
+        mask &= (kp >= n_meta)[:, None, :]   # meta: separate pass below
+    bf16 = bool(ctx is not None and ctx.bf16_scores)
+    out_b, lse_b = _sdpa_lse(qb, kb, vb, mask, bf16, ctx)
+    out_b = out_b.reshape(B, Sp, H, hd)[:, :S]
+    lse_b = lse_b.reshape(B, Sp, H)[:, :S]
+
+    if n_meta:
+        # meta keys are always visible through the window (sinks), but
+        # causality still applies for the meta tokens' own queries
+        mask_m = (jnp.arange(n_meta)[None, None, :]
+                  <= pos1d[:, :S, None])
+        out_m, lse_m = _sdpa_lse(q[:, :S], k[:, :n_meta], v[:, :n_meta],
+                                 mask_m, bf16)
+        mx = jnp.maximum(lse_b, lse_m)
+        wb = jnp.exp(lse_b - mx)
+        wm = jnp.exp(lse_m - mx)
+        den = wb + wm
+        out = (out_b * (wb / den)[..., None].astype(out_b.dtype)
+               + out_m * (wm / den)[..., None].astype(out_m.dtype))
+    else:
+        out = out_b
+    return out
+
+
+# ---------------------------------------------------------------------
+# §Perf: flash-style custom VJP -- save the LSE, recompute attention
+# weights in backward as ONE fused exp((s - lse)) pass instead of
+# autodiff re-running the full mask/max/exp/sum/div chain. Cuts the
+# number of materialized S x S tensors in backward roughly in half
+# (the HBM-bound term for every train cell). Numerics: standard flash
+# backward (dV = w^T dO; dS = w*(dW - rowsum(dW*w)); exact, not approx).
+# ---------------------------------------------------------------------
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(4,))
+def sdpa_flash(q5, k, v, mask, scale):
+    """q5: (B,Sq,K,rep,hd); k,v: (B,Sk,K,hd); mask (B,Sq,Sk) bool."""
+    out, _ = _flash_fwd_impl(q5, k, v, mask, scale)
+    return out
+
+
+def _flash_fwd_impl(q5, k, v, mask, scale):
+    s = jnp.einsum("bqkrh,bskh->bkrqs", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None]).astype(v.dtype)
+    l = jnp.sum(p, axis=-1, dtype=jnp.float32)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = jnp.einsum("bkrqs,bskh->bqkrh", p, v)
+    out = out / jnp.moveaxis(
+        jnp.maximum(l, 1e-30).reshape(l.shape[0], -1, l.shape[-1]), 1, 2
+    ).reshape(out.shape[:2] + out.shape[2:4] + (1,)).astype(out.dtype)
+    return out, lse
+
+
+def _flash_fwd(q5, k, v, mask, scale):
+    out, lse = _flash_fwd_impl(q5, k, v, mask, scale)
+    return out, (q5, k, v, mask, lse)
+
+
+def _flash_bwd(scale, res, dout):
+    q5, k, v, mask, lse = res
+    # recompute weights from the saved LSE: one dot + one fused exp
+    s = jnp.einsum("bqkrh,bskh->bkrqs", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    w = jnp.exp(s - lse[..., None]).astype(v.dtype)       # (B,K,rep,Sq,Sk)
+    dv = jnp.einsum("bkrqs,bqkrh->bskh", w, dout)
+    dw = jnp.einsum("bqkrh,bskh->bkrqs", dout, v)
+    delta = jnp.sum(dw.astype(jnp.float32) * w.astype(jnp.float32),
+                    axis=-1)                              # (B,K,rep,Sq)
+    ds = (w.astype(jnp.float32)
+          * (dw.astype(jnp.float32) - delta[..., None])
+          * scale).astype(q5.dtype)
+    dq5 = jnp.einsum("bkrqs,bskh->bqkrh", ds, k)
+    dk = jnp.einsum("bkrqs,bqkrh->bskh", ds, q5)
+    import numpy as _np
+    dmask = _np.zeros(mask.shape, jax.dtypes.float0)
+    return dq5, dk, dv, dmask
+
+
+sdpa_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_decode_windowed(x: Array, p: Params, cfg: ModelConfig,
+                              cache: Dict[str, Array], positions: Array,
+                              *, window: int, n_meta: int = 0
+                              ) -> Tuple[Array, Dict[str, Array]]:
+    """§Perf: sliding-window decode that READS only the live window.
+
+    The baseline decode scores the query against the FULL cache and
+    masks (524k-wide reads for long_500k even though only `window` keys
+    are visible). Here the cache update is unchanged (the cache stays
+    dense so global layers / later resizing work), but attention slices
+    just [idx-window+1 .. idx] plus the meta prefix: score width drops
+    from Smax to window + n_meta (512x for hymba at 500k).
+    Mathematically identical to the masked baseline.
+    """
+    B, _, D = x.shape
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions)
+    idx = cache["idx"]
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    Smax = k.shape[1]
+    start = jnp.clip(idx - window + 1, 0, Smax - window)
+    k_win = jax.lax.dynamic_slice_in_dim(k, start, window, axis=1)
+    v_win = jax.lax.dynamic_slice_in_dim(v, start, window, axis=1)
+    kp_win = (start + jnp.arange(window))[None, :]          # (1, W)
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    q_pos = pos1d[:, -1:]
+    mask_win = make_mask(q_pos, kp_win, causal=True, window=window)
+    # exclude meta positions from the window slice (handled separately)
+    if n_meta:
+        mask_win &= (kp_win >= n_meta)[:, None, :]
+        k_m, v_m = k[:, :n_meta], v[:, :n_meta]
+        kk = jnp.concatenate([k_m, k_win], axis=1)
+        vv = jnp.concatenate([v_m, v_win], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, 1, n_meta), bool), mask_win], axis=2)
+    else:
+        kk, vv, mask = k_win, v_win, mask_win
+    out = _sdpa(q, kk, vv, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out,
+                   p["wo"].reshape(cfg.n_heads, cfg.hd, D))
+    return y, {"k": k, "v": v, "idx": idx + 1}

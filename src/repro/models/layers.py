@@ -1,0 +1,96 @@
+"""Primitive layers: norms, MLPs, RoPE / M-RoPE. Pure functions on pytrees."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: Array, p: Params, kind: str, eps: float) -> Array:
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def swiglu(x: Array, p: Params) -> Array:
+    """SwiGLU MLP: silu(x W_gate) * (x W_up) W_down."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, p["w_down"])
+
+
+def gelu_mlp(x: Array, p: Params) -> Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def mlp(x: Array, p: Params, kind: str) -> Array:
+    return swiglu(x, p) if kind == "swiglu" else gelu_mlp(x, p)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd), positions: (B, S) -> rotated x (same dtype)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: Tuple[int, int, int]) -> Array:
+    """M-RoPE (qwen2-vl): positions (B, S, 3) = (t, h, w) indices.
+
+    The hd/2 frequency slots are split into three contiguous sections;
+    each section rotates by its own position stream. For pure text
+    (t == h == w) this reduces exactly to standard RoPE.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=hd // 2)     # (hd/2,)
+    pos = positions.astype(jnp.float32)[..., sec_id]     # (B, S, hd/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

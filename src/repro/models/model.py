@@ -1,0 +1,593 @@
+"""Unified causal LM / enc-dec model: init, forward, prefill, decode.
+
+One parameter pytree with layer leaves stacked on a leading L axis;
+`jax.lax.scan` over layers (+ per-layer remat) keeps the HLO one-body-
+per-stack, which is what makes 80 full-size dry-run compiles tractable
+and keeps activation memory at one (B, S, D) residual per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attention, attention_decode,
+                                    banded_attention, banded_core,
+                                    cross_attention, make_mask, _sdpa,
+                                    _project_qkv)
+from repro.models.configs import ModelConfig
+from repro.models.layers import mlp, norm, rmsnorm, sinusoidal_positions
+from repro.models.moe import ShardingCtx, moe_ffn
+from repro.models.ssm import ssd_decode, ssd_forward
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# =====================================================================
+# init
+# =====================================================================
+
+def _norm_p(key, L, D, cfg, zero_bias=True):
+    p = {"scale": jnp.ones((L, D) if L else (D,), cfg.dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((L, D) if L else (D,), cfg.dtype)
+    return p
+
+
+def _dense(key, shape, cfg, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(cfg.dtype)
+
+
+def _attn_p(key, L, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    lead = (L,) if L else ()
+    p = {"wq": _dense(ks[0], lead + (D, H * hd), cfg),
+         "wk": _dense(ks[1], lead + (D, K * hd), cfg),
+         "wv": _dense(ks[2], lead + (D, K * hd), cfg),
+         "wo": _dense(ks[3], lead + (H * hd, D), cfg)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(lead + (hd,), cfg.dtype)
+        p["k_norm"] = jnp.ones(lead + (hd,), cfg.dtype)
+    return p
+
+
+def _mlp_p(key, L, cfg: ModelConfig, d_ff=None) -> Params:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    lead = (L,) if L else ()
+    if cfg.mlp == "swiglu":
+        return {"w_gate": _dense(ks[0], lead + (D, F), cfg),
+                "w_up": _dense(ks[1], lead + (D, F), cfg),
+                "w_down": _dense(ks[2], lead + (F, D), cfg)}
+    return {"w_up": _dense(ks[0], lead + (D, F), cfg),
+            "w_down": _dense(ks[1], lead + (F, D), cfg)}
+
+
+def _moe_p(key, L, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (L,) if L else ()
+    p = {"router": _dense(ks[0], lead + (D, E), cfg, scale=0.02),
+         "w_gate": _dense(ks[1], lead + (E, D, F), cfg),
+         "w_up": _dense(ks[2], lead + (E, D, F), cfg),
+         "w_down": _dense(ks[3], lead + (E, F, D), cfg)}
+    if cfg.shared_expert:
+        p["shared"] = _mlp_p(ks[4], L, cfg)
+    return p
+
+
+def _ssm_p(key, L, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    proj_out = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + H
+    lead = (L,) if L else ()
+    dt = jnp.exp(jax.random.uniform(ks[2], lead + (H,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_proj": _dense(ks[0], lead + (D, proj_out), cfg),
+        "conv_w": _dense(ks[1], lead + (cfg.conv_dim, cfg.ssm_conv), cfg,
+                         scale=cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros(lead + (cfg.conv_dim,), cfg.dtype),
+        "A_log": jnp.zeros(lead + (H,), jnp.float32)
+                 + jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D_skip": jnp.ones(lead + (H,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),   # inv softplus
+        "norm_scale": jnp.ones(lead + (di,), cfg.dtype),
+        "out_proj": _dense(ks[3], lead + (di, D), cfg),
+    }
+
+
+def _layer_stack_p(key, L: int, cfg: ModelConfig, *, cross: bool = False,
+                   causal_stack: bool = True) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": _norm_p(ks[0], L, cfg.d_model, cfg),
+                 "ln2": _norm_p(ks[1], L, cfg.d_model, cfg)}
+    if cfg.has_attention:
+        p["attn"] = _attn_p(ks[2], L, cfg)
+    if cfg.has_ssm and causal_stack:
+        p["ssm"] = _ssm_p(ks[3], L, cfg)
+        if cfg.family == "hybrid":
+            p["bn_attn"] = _norm_p(ks[4], L, cfg.d_model, cfg)
+            p["bn_ssm"] = _norm_p(ks[5], L, cfg.d_model, cfg)
+    if cfg.is_moe:
+        p["moe"] = _moe_p(ks[6], L, cfg)
+    elif cfg.family != "ssm":
+        p["mlp"] = _mlp_p(ks[6], L, cfg)
+    if cross:
+        p["xattn"] = _attn_p(ks[7], L, cfg)
+        p["ln_x"] = _norm_p(ks[7], L, cfg.d_model, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: Array) -> Params:
+    ks = jax.random.split(key, 8)
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    p: Params = {
+        "embed": _dense(ks[0], (V, D), cfg, scale=0.02),
+        "final_norm": _norm_p(ks[1], 0, D, cfg),
+        "layers": _layer_stack_p(ks[2], L, cfg,
+                                 cross=bool(cfg.encoder_layers)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense(ks[3], (D, V), cfg, scale=0.02)
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, family="dense", n_experts=0)
+        p["enc_layers"] = _layer_stack_p(ks[4], cfg.encoder_layers, enc_cfg)
+        p["enc_norm"] = _norm_p(ks[5], 0, D, cfg)
+    if cfg.meta_tokens:
+        p["meta"] = _dense(ks[6], (cfg.meta_tokens, D), cfg, scale=0.02)
+    return p
+
+
+# =====================================================================
+# blocks
+# =====================================================================
+
+def _is_global(layer_idx: Array, cfg: ModelConfig) -> Array:
+    """Per-layer flag: full attention (vs sliding window)."""
+    if not cfg.sliding_window:
+        return jnp.asarray(True)
+    if not cfg.global_attn_layers:
+        return jnp.asarray(False)
+    g = jnp.asarray(cfg.global_attn_layers)
+    return jnp.any(layer_idx == g)
+
+
+def _mixer(x, lp, cfg: ModelConfig, positions, layer_idx, ctx,
+           enc=None, static_window=None):
+    """Token mixer for one layer: attention / SSM / hybrid-parallel.
+
+    static_window: None (baseline: compute full+windowed, runtime-select)
+    or 'window'/'global' when the layer stack is segmented statically
+    (§Perf banded profile -- avoids the dual computation entirely).
+    """
+    outs = []
+    if cfg.has_attention:
+        if static_window == "window":
+            a = banded_attention(x, lp["attn"], cfg, positions,
+                                 window=cfg.sliding_window,
+                                 n_meta=cfg.meta_tokens, ctx=ctx)
+            if cfg.family == "hybrid":
+                a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+            outs.append(a)
+        elif static_window == "global":
+            a = attention(x, lp["attn"], cfg, positions,
+                          n_meta=cfg.meta_tokens, ctx=ctx)
+            if cfg.family == "hybrid":
+                a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+            outs.append(a)
+        # window size must be static for mask building: build both, select
+        elif cfg.sliding_window:
+            a_full = attention(x, lp["attn"], cfg, positions,
+                               window=0, n_meta=cfg.meta_tokens, ctx=ctx)
+            a_win = attention(x, lp["attn"], cfg, positions,
+                              window=cfg.sliding_window,
+                              n_meta=cfg.meta_tokens, ctx=ctx)
+            a = jnp.where(_is_global(layer_idx, cfg), a_full, a_win)
+            if cfg.family == "hybrid":
+                a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+            outs.append(a)
+        else:
+            a = attention(x, lp["attn"], cfg, positions,
+                          n_meta=cfg.meta_tokens, ctx=ctx)
+            if cfg.family == "hybrid":
+                a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+            outs.append(a)
+    if cfg.has_ssm:
+        s, _ = ssd_forward(x, lp["ssm"], cfg)
+        if cfg.family == "hybrid":
+            s = norm(s, lp["bn_ssm"], cfg.norm, cfg.norm_eps)
+        outs.append(s)
+    if len(outs) == 2:
+        return 0.5 * (outs[0] + outs[1])
+    return outs[0]
+
+
+def _ffn(x, lp, cfg: ModelConfig, ctx):
+    if cfg.is_moe:
+        return moe_ffn(x, lp["moe"], cfg, ctx)
+    if cfg.family == "ssm":
+        return jnp.zeros_like(x)          # mamba2: no separate FFN
+    return mlp(x, lp["mlp"], cfg.mlp)
+
+
+def _decoder_layer(x, lp, cfg, positions, layer_idx, ctx, enc=None,
+                   static_window=None):
+    if ctx is not None:
+        x = ctx.act3(x)
+    h = norm(x, lp["ln1"], cfg.norm, cfg.norm_eps)
+    x = x + _mixer(h, lp, cfg, positions, layer_idx, ctx,
+                   static_window=static_window)
+    if enc is not None:
+        h = norm(x, lp["ln_x"], cfg.norm, cfg.norm_eps)
+        x = x + cross_attention(h, enc, lp["xattn"], cfg)
+    if cfg.family != "ssm":
+        h = norm(x, lp["ln2"], cfg.norm, cfg.norm_eps)
+        x = x + _ffn(h, lp, cfg, ctx)
+    return x
+
+
+def layer_segments(cfg: ModelConfig):
+    """Consecutive same-attention-kind layer runs, for static banding."""
+    segs = []
+    for l in range(cfg.n_layers):
+        kind = ("global" if (not cfg.sliding_window
+                             or l in cfg.global_attn_layers) else "window")
+        if segs and segs[-1][2] == kind:
+            segs[-1] = (segs[-1][0], l + 1, kind)
+        else:
+            segs.append((l, l + 1, kind))
+    return segs
+
+
+def _scan_layers(x, layers_p, cfg: ModelConfig, positions, ctx,
+                 enc=None, n_layers: Optional[int] = None,
+                 remat: bool = True):
+    L = n_layers or cfg.n_layers
+    banded = (ctx is not None and ctx.banded and cfg.sliding_window
+              and cfg.has_attention)
+
+    def make_body(static_window):
+        def body(carry, inp):
+            lp, idx = inp
+            y = _decoder_layer(carry, lp, cfg, positions, idx, ctx, enc,
+                               static_window=static_window)
+            return y, None
+        return jax.checkpoint(body, policy=None) if remat else body
+
+    if not banded:
+        x, _ = jax.lax.scan(make_body(None), x,
+                            (layers_p, jnp.arange(L)))
+        return x
+    # §Perf: segment the stack so each scan has a STATIC window kind
+    for a, b, kind in layer_segments(cfg):
+        seg_p = jax.tree.map(lambda t: t[a:b], layers_p)
+        x, _ = jax.lax.scan(make_body(kind), x,
+                            (seg_p, jnp.arange(a, b)))
+    return x
+
+
+# =====================================================================
+# full model
+# =====================================================================
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return params["embed"][tokens].astype(cfg.dtype) * (cfg.d_model ** 0.5)
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig, ctx=None):
+    x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if ctx is not None and logits.shape[1] > 1:
+        logits = ctx.act_logits(logits)
+    return logits
+
+
+def encode(params, enc_input: Array, cfg: ModelConfig, ctx=None) -> Array:
+    """Whisper encoder: (B, T_enc, D) stub frame embeddings -> states."""
+    B, T, D = enc_input.shape
+    x = enc_input.astype(cfg.dtype) + sinusoidal_positions(T, D).astype(cfg.dtype)
+    enc_cfg = dataclasses.replace(cfg, family="dense", n_experts=0,
+                                  meta_tokens=0)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    # non-causal: reuse the decoder layer with causal off via full mask
+    def body(carry, inp):
+        lp, idx = inp
+        h = norm(carry, lp["ln1"], cfg.norm, cfg.norm_eps)
+        a = attention(h, lp["attn"], enc_cfg, pos, causal=False, ctx=ctx)
+        y = carry + a
+        h = norm(y, lp["ln2"], cfg.norm, cfg.norm_eps)
+        return y + mlp(h, lp["mlp"], cfg.mlp), None
+    fn = jax.checkpoint(body)
+    x, _ = jax.lax.scan(fn, x, (params["enc_layers"],
+                                jnp.arange(cfg.encoder_layers)))
+    return norm(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
+
+
+def forward(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            ctx: Optional[ShardingCtx] = None) -> Array:
+    """Training/eval forward -> logits (B, S, V).
+
+    batch: tokens (B, S) [+ positions (B,S) or (B,S,3) for mrope]
+           [+ enc_input (B, T_enc, D) for encdec]
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.encoder_layers and not cfg.mrope:
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)[None]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (B,) + params["meta"].shape)
+        x = jnp.concatenate([meta.astype(cfg.dtype), x], axis=1)
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(cfg.meta_tokens)[None], (B, cfg.meta_tokens)),
+             positions + cfg.meta_tokens], axis=1)
+    enc = None
+    if cfg.encoder_layers:
+        enc = encode(params, batch["enc_input"], cfg, ctx)
+    if ctx is not None:
+        x = ctx.act3(x)
+    x = _scan_layers(x, params["layers"], cfg, positions, ctx, enc)
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens:]
+    return logits_from_hidden(params, x, cfg, ctx)
+
+
+def loss_fn(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            ctx: Optional[ShardingCtx] = None) -> Array:
+    """Next-token cross-entropy (labels = batch['labels'], -100 ignored)."""
+    logits = forward(params, batch, cfg, ctx).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_c = jnp.where(valid, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# =====================================================================
+# serving: prefill + decode
+# =====================================================================
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int) -> Params:
+    """KV (+SSM) cache pytree, layer-stacked."""
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    cache: Params = {"idx": jnp.zeros((), jnp.int32)}
+    S = max_len + cfg.meta_tokens
+    if cfg.has_attention:
+        cache["k"] = jnp.zeros((L, B, S, K, hd), cfg.dtype)
+        cache["v"] = jnp.zeros((L, B, S, K, hd), cfg.dtype)
+    if cfg.has_ssm:
+        cache["state"] = jnp.zeros((L, B, cfg.ssm_heads, cfg.ssm_state,
+                                    cfg.ssm_headdim), jnp.float32)
+        cache["conv"] = jnp.zeros((L, B, cfg.ssm_conv - 1, cfg.conv_dim),
+                                  jnp.float32)
+    return cache
+
+
+def _decode_layer(x, lp, cfg, cache_l, positions, layer_idx, ctx, enc=None,
+                  static_window=None):
+    new_cache = {}
+    h = norm(x, lp["ln1"], cfg.norm, cfg.norm_eps)
+    outs = []
+    if cfg.has_attention:
+        c = {"k": cache_l["k"], "v": cache_l["v"], "idx": cache_l["idx"]}
+        if static_window == "window":
+            from repro.models.attention import attention_decode_windowed
+            a, cnew = attention_decode_windowed(
+                h, lp["attn"], cfg, c, positions,
+                window=cfg.sliding_window, n_meta=cfg.meta_tokens)
+        elif static_window == "global":
+            a, cnew = attention_decode(h, lp["attn"], cfg, c, positions,
+                                       n_meta=cfg.meta_tokens)
+        elif cfg.sliding_window:
+            a_full, cf = attention_decode(h, lp["attn"], cfg, c, positions,
+                                          window=0, n_meta=cfg.meta_tokens)
+            a_win, _ = attention_decode(h, lp["attn"], cfg, c, positions,
+                                        window=cfg.sliding_window,
+                                        n_meta=cfg.meta_tokens)
+            a = jnp.where(_is_global(layer_idx, cfg), a_full, a_win)
+            cnew = cf
+        else:
+            a, cnew = attention_decode(h, lp["attn"], cfg, c, positions,
+                                       n_meta=cfg.meta_tokens)
+        if cfg.family == "hybrid":
+            a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+        outs.append(a)
+        new_cache["k"], new_cache["v"] = cnew["k"], cnew["v"]
+    if cfg.has_ssm:
+        s, snew = ssd_decode(h, lp["ssm"], cfg,
+                             {"state": cache_l["state"],
+                              "conv": cache_l["conv"]})
+        if cfg.family == "hybrid":
+            s = norm(s, lp["bn_ssm"], cfg.norm, cfg.norm_eps)
+        outs.append(s)
+        new_cache["state"], new_cache["conv"] = snew["state"], snew["conv"]
+    x = x + (0.5 * (outs[0] + outs[1]) if len(outs) == 2 else outs[0])
+    if enc is not None:
+        h = norm(x, lp["ln_x"], cfg.norm, cfg.norm_eps)
+        x = x + cross_attention(h, enc, lp["xattn"], cfg)
+    if cfg.family != "ssm":
+        h = norm(x, lp["ln2"], cfg.norm, cfg.norm_eps)
+        x = x + _ffn(h, lp, cfg, ctx)
+    return x, new_cache
+
+
+def decode_step(params: Params, token: Array, cache: Params,
+                cfg: ModelConfig, ctx: Optional[ShardingCtx] = None,
+                enc: Optional[Array] = None
+                ) -> Tuple[Array, Params]:
+    """One decode step. token: (B, 1) -> (logits (B, 1, V), new cache)."""
+    B = token.shape[0]
+    if enc is not None:
+        enc = enc.astype(cfg.dtype)   # raw f32 enc states would promote
+    x = embed_tokens(params, token, cfg)
+    idx = cache["idx"]
+    if cfg.encoder_layers:
+        pe = sinusoidal_positions(32768 + 8, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, idx, 1)[None].astype(cfg.dtype)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(idx[None, None, None],
+                                     (B, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
+
+    def body(carry, inp, static_window=None):
+        lp, cache_l, li = inp
+        y, new_c = _decode_layer(carry, lp, cfg,
+                                 dict(cache_l, idx=idx), positions, li,
+                                 ctx, enc, static_window=static_window)
+        return y, new_c
+
+    layer_caches = {k: v for k, v in cache.items() if k != "idx"}
+    # NOTE (§Perf, refuted iteration): segmenting the DECODE scan slices
+    # the layer caches per segment, which XLA lowers as full-cache
+    # copies EVERY step (decode_32k: 0.073 s -> 0.899 s). The windowed
+    # read (attention_decode_windowed, bit-identical logits) only pays
+    # off with segment-structured cache STORAGE -- future work, gated
+    # behind ctx.windowed_decode (no profile sets it).
+    banded = (ctx is not None and getattr(ctx, "windowed_decode", False)
+              and cfg.sliding_window and cfg.has_attention)
+    if not banded:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], layer_caches,
+                      jnp.arange(cfg.n_layers)))
+    else:
+        # §Perf: static segmentation -- windowed layers read only the
+        # live window of the cache (attention_decode_windowed)
+        parts = []
+        for a, b, kind in layer_segments(cfg):
+            seg_p = jax.tree.map(lambda t: t[a:b], params["layers"])
+            seg_c = jax.tree.map(lambda t: t[a:b], layer_caches)
+            x, seg_new = jax.lax.scan(
+                partial(body, static_window=kind), x,
+                (seg_p, seg_c, jnp.arange(a, b)))
+            parts.append(seg_new)
+        new_layer_caches = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    logits = logits_from_hidden(params, x, cfg, ctx)
+    new_cache = dict(new_layer_caches, idx=idx + 1)
+    return logits, new_cache
+
+
+def prefill(params: Params, batch: Dict[str, Array], cfg: ModelConfig,
+            max_len: int, ctx: Optional[ShardingCtx] = None
+            ) -> Tuple[Array, Params]:
+    """Prefill: run the full prompt, build the cache, return last logits.
+
+    Implemented as forward + cache construction inside one scan so the
+    cache fills in a single pass (no per-token loop).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.encoder_layers and not cfg.mrope:
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(cfg.dtype)[None]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (B,) + params["meta"].shape)
+        x = jnp.concatenate([meta.astype(cfg.dtype), x], axis=1)
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(cfg.meta_tokens)[None],
+                              (B, cfg.meta_tokens)),
+             positions + cfg.meta_tokens], axis=1)
+    enc = encode(params, batch["enc_input"], cfg, ctx) if cfg.encoder_layers else None
+    Sm = x.shape[1]
+    cache = init_cache(cfg, B, max_len)
+
+    def body(carry, inp, static_window=None):
+        lp, li = inp
+        if ctx is not None:
+            carry = ctx.act3(carry)
+        h = norm(carry, lp["ln1"], cfg.norm, cfg.norm_eps)
+        new_c = {}
+        outs = []
+        if cfg.has_attention:
+            q, k, v = _project_qkv(h, lp["attn"], cfg, positions)
+            pos1d = positions if positions.ndim == 2 else positions[..., 0]
+            if static_window == "window":
+                from repro.models.attention import banded_core
+                a = banded_core(q, k, v, pos1d, cfg,
+                                window=cfg.sliding_window,
+                                n_meta=cfg.meta_tokens, ctx=ctx)
+            elif static_window == "global":
+                m = make_mask(pos1d, pos1d, causal=True,
+                              n_meta=cfg.meta_tokens)
+                a = _sdpa(q, k, v, m, cfg, ctx)
+            elif cfg.sliding_window:
+                m_full = make_mask(pos1d, pos1d, causal=True, window=0,
+                                   n_meta=cfg.meta_tokens)
+                m_win = make_mask(pos1d, pos1d, causal=True,
+                                  window=cfg.sliding_window,
+                                  n_meta=cfg.meta_tokens)
+                a_f = _sdpa(q, k, v, m_full, cfg, ctx)
+                a_w = _sdpa(q, k, v, m_win, cfg, ctx)
+                a = jnp.where(_is_global(li, cfg), a_f, a_w)
+            else:
+                m = make_mask(pos1d, pos1d, causal=True,
+                              n_meta=cfg.meta_tokens)
+                a = _sdpa(q, k, v, m, cfg, ctx)
+            a = jnp.einsum("bshk,hkd->bsd", a,
+                           lp["attn"]["wo"].reshape(cfg.n_heads, cfg.hd,
+                                                    cfg.d_model))
+            if cfg.family == "hybrid":
+                a = norm(a, lp["bn_attn"], cfg.norm, cfg.norm_eps)
+            outs.append(a)
+            Smax = max_len + cfg.meta_tokens
+            pad = Smax - Sm
+            new_c["k"] = jnp.pad(k.astype(cfg.dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_c["v"] = jnp.pad(v.astype(cfg.dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.has_ssm:
+            s, snew = ssd_forward(h, lp["ssm"], cfg)
+            if cfg.family == "hybrid":
+                s = norm(s, lp["bn_ssm"], cfg.norm, cfg.norm_eps)
+            outs.append(s)
+            new_c["state"], new_c["conv"] = snew["state"], snew["conv"]
+        y = carry + (0.5 * (outs[0] + outs[1]) if len(outs) == 2 else outs[0])
+        if enc is not None:
+            h2 = norm(y, lp["ln_x"], cfg.norm, cfg.norm_eps)
+            y = y + cross_attention(h2, enc, lp["xattn"], cfg)
+        if cfg.family != "ssm":
+            h3 = norm(y, lp["ln2"], cfg.norm, cfg.norm_eps)
+            y = y + _ffn(h3, lp, cfg, ctx)
+        return y, new_c
+
+    banded = (ctx is not None and ctx.banded and cfg.sliding_window
+              and cfg.has_attention)
+    if not banded:
+        fn = jax.checkpoint(body)
+        x, layer_caches = jax.lax.scan(fn, x, (params["layers"],
+                                               jnp.arange(cfg.n_layers)))
+    else:
+        # §Perf: segment the stack so windowed layers run the banded
+        # kernel with a STATIC window (see _scan_layers)
+        cache_parts = []
+        for a, b, kind in layer_segments(cfg):
+            seg_p = jax.tree.map(lambda t: t[a:b], params["layers"])
+            fn = jax.checkpoint(partial(body, static_window=kind))
+            x, seg_caches = jax.lax.scan(fn, x, (seg_p,
+                                                 jnp.arange(a, b)))
+            cache_parts.append(seg_caches)
+        layer_caches = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *cache_parts)
+    if cfg.meta_tokens:
+        x_last = x[:, -1:]
+    else:
+        x_last = x[:, -1:]
+    logits = logits_from_hidden(params, x_last, cfg, ctx)
+    cache = dict(layer_caches, idx=jnp.asarray(Sm, jnp.int32))
+    return logits, cache

@@ -1,0 +1,165 @@
+"""Mamba-2 SSD (state-space duality) mixer -- arXiv:2405.21060.
+
+Chunked "block-decomposition" algorithm for training/prefill (intra-chunk
+quadratic term + inter-chunk state recurrence), single-step recurrence for
+decode. Selective-scan numerics run in fp32 (exp of decay cumsums),
+matmul-heavy terms stay in the model dtype for the MXU.
+
+Shapes (per layer): d_inner = expand*D, P = headdim, H = d_inner/P heads,
+N = d_state, G = n_groups (B/C shared across H/G heads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array, k: int) -> Array:
+    """Depthwise causal conv, width k, via k shifted adds (k is 4)."""
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    S = xBC.shape[1]
+    for j in range(k):
+        out = out + pad[:, j:j + S, :].astype(jnp.float32) * w[:, j]
+    return jax.nn.silu(out + b).astype(xBC.dtype)
+
+
+def ssd_forward(x: Array, p: Params, cfg: ModelConfig
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence SSD. x: (B, S, D) -> (y: (B, S, D), final ssm cache)."""
+    B, S0, D = x.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    Q = min(cfg.ssm_chunk, S0)
+    # pad to a chunk multiple; padded steps get dt == 0 (identity state
+    # update, zero output contribution) so the recurrence is unaffected
+    S = -(-S0 // Q) * Q
+    if S != S0:
+        x = jnp.pad(x, ((0, 0), (0, S - S0), (0, 0)))
+    valid = (jnp.arange(S) < S0)[None, :, None]          # (1, S, 1)
+    nc = S // Q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + cfg.conv_dim]
+    dt_raw = zxbcdt[..., di + cfg.conv_dim:]
+    conv_tail = xBC[:, S0 - (cfg.ssm_conv - 1):S0, :]    # decode carry (raw)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"], cfg.ssm_conv)
+    xs = xBC[..., :di]
+    Bm = xBC[..., di:di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = dt * valid                                                  # mask pad
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                      # (H,)
+    dA = dt * A                                                       # (B,S,H)
+
+    xh = xs.reshape(B, S, H, P)
+    rep = H // G                              # heads per B/C group
+    # chunked views
+    dAc = dA.reshape(B, nc, Q, H)
+    dtc = dt.reshape(B, nc, Q, H)
+    xc = xh.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, G, N)
+    Cc = Cm.reshape(B, nc, Q, G, N)
+
+    cum = jnp.cumsum(dAc, axis=2)                                     # (B,nc,Q,H)
+    # ---- intra-chunk (quadratic, attention-like) ----
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                           # (B,nc,G,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])    # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], decay, 0.0)            # q>=k
+    M = M * dtc[:, :, None, :, :]                                     # * dt[k]
+    # scores per head: CB group-broadcast to heads
+    CBh = jnp.repeat(CB, rep, axis=2)                                 # (B,nc,H,Q,K)
+    Mh = jnp.moveaxis(M, -1, 2)                                       # (B,nc,H,Q,K)
+    W = CBh * Mh
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", W.astype(x.dtype), xc)
+
+    # ---- chunk states ----
+    # S_c = sum_k exp(cum[last]-cum[k]) * dt[k] * B[k] (x) x[k]
+    seg = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                      # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                                  # (B,nc,Q,H,N)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                        seg, Bh.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence over nc ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # (B,nc,H)
+
+    def step(carry, inp):
+        st_in = carry                                                 # (B,H,N,P)
+        dec, s_new = inp                                              # (B,H),(B,H,N,P)
+        st_out = st_in * dec[..., None, None] + s_new
+        return st_out, st_in                                          # emit ENTERING state
+
+    init = jnp.zeros((B, H, N, P), jnp.float32)
+    final_state, entering = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)                           # (B,nc,H,N,P)
+
+    Ch = jnp.repeat(Cc, rep, axis=3)                                  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnp->bcqhp",
+                         jnp.exp(cum), Ch.astype(jnp.float32), entering)
+
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(B, S, H, P)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)[:, :S0]
+    z = z[:, :S0]
+    # gated RMSNorm + out projection
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    cache = {"state": final_state,
+             "conv": conv_tail.astype(jnp.float32)}
+    return out, cache
+
+
+def ssd_decode(x: Array, p: Params, cfg: ModelConfig,
+               cache: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    """One-token recurrent step. x: (B, 1, D), cache from ssd_forward."""
+    B, _, D = x.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    k = cfg.ssm_conv
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]          # (B,E)
+    z = zxbcdt[:, :di]
+    xBC_new = zxbcdt[:, di:di + cfg.conv_dim]
+    dt_raw = zxbcdt[:, di + cfg.conv_dim:]
+
+    conv_buf = jnp.concatenate(
+        [cache["conv"], xBC_new[:, None, :].astype(jnp.float32)], axis=1)  # (B,k,C)
+    xBC = jnp.einsum("bkc,ck->bc", conv_buf, p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(xBC + p["conv_b"]).astype(x.dtype)
+
+    xs = xBC[:, :di].reshape(B, H, P)
+    Bm = xBC[:, di:di + G * N].reshape(B, G, N)
+    Cm = xBC[:, di + G * N:].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                                   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A)                                              # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    state = cache["state"] * dec[..., None, None] + upd                # (B,H,N,P)
+
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32))[:, None].astype(x.dtype),
+                p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_conv = conv_buf[:, 1:]                                         # (B,k-1,C)
+    return out, {"state": state, "conv": new_conv}

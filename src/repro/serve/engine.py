@@ -1,0 +1,146 @@
+"""Serving engines.
+
+`DetectionService` -- the paper's co-processor as a batched service:
+requests (RGB windows) are queued, padded to the compiled batch size,
+classified in one TPU step, results returned per request. This is the
+Fig. 6 datapath plus the batching/queueing layer an FPGA front-end
+would implement in NIOS/ARM (the paper's "future development" §VI).
+
+`generate` -- LM serving: prefill + greedy/temperature decode loop with
+the layer-stacked KV cache. Used by examples and the serve benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hog import HOGConfig, PAPER_HOG
+from repro.core.pipeline import classify_windows
+from repro.core.svm import SVMParams
+from repro.models.configs import ModelConfig
+from repro.models.model import decode_step, prefill
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- detection
+
+@dataclasses.dataclass
+class DetectionRequest:
+    window: np.ndarray                  # (130, 66, 3) uint8
+    future: "queue.Queue"
+
+
+class DetectionService:
+    """Micro-batching co-processor front-end (thread-based)."""
+
+    def __init__(self, svm: SVMParams, batch_size: int = 64,
+                 cfg: HOGConfig = PAPER_HOG, path: str = "ref",
+                 max_wait_ms: float = 2.0):
+        self.svm = svm
+        self.batch = batch_size
+        self.cfg = cfg
+        self.path = path
+        self.max_wait = max_wait_ms / 1e3
+        self.q: "queue.Queue[DetectionRequest]" = queue.Queue()
+        self._stop = False
+        self._fn = jax.jit(partial(classify_windows, cfg=cfg, path=path))
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0}
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop = True
+        self._thread.join(timeout=5)
+
+    def submit(self, window: np.ndarray) -> "queue.Queue":
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self.q.put(DetectionRequest(window, fut))
+        return fut
+
+    def detect(self, windows: List[np.ndarray],
+               timeout: float = 30.0) -> List[Dict[str, float]]:
+        futs = [self.submit(w) for w in windows]
+        return [f.get(timeout=timeout) for f in futs]
+
+    def _loop(self):
+        while not self._stop:
+            reqs: List[DetectionRequest] = []
+            try:
+                reqs.append(self.q.get(timeout=0.1))
+            except queue.Empty:
+                continue
+            t0 = time.time()
+            while (len(reqs) < self.batch
+                   and time.time() - t0 < self.max_wait):
+                try:
+                    reqs.append(self.q.get_nowait())
+                except queue.Empty:
+                    time.sleep(0.0005)
+            n = len(reqs)
+            pad = self.batch - n
+            wins = np.stack([r.window for r in reqs]
+                            + [np.zeros_like(reqs[0].window)] * pad)
+            out = self._fn(self.svm, jnp.asarray(wins))
+            score = np.asarray(out["score"])
+            human = np.asarray(out["human"])
+            for i, r in enumerate(reqs):
+                r.future.put({"score": float(score[i]),
+                              "human": int(human[i])})
+            self.stats["batches"] += 1
+            self.stats["requests"] += n
+            self.stats["occupancy"] = (self.stats["requests"]
+                                       / (self.stats["batches"] * self.batch))
+
+
+# -------------------------------------------------------------------- LM
+
+def generate(params: Any, cfg: ModelConfig, prompt: Array,
+             max_new_tokens: int = 32, temperature: float = 0.0,
+             key: Optional[Array] = None, ctx=None,
+             enc_input: Optional[Array] = None) -> Array:
+    """Greedy/temperature decoding. prompt: (B, S) -> (B, S + new)."""
+    B, S = prompt.shape
+    batch = {"tokens": prompt}
+    if cfg.encoder_layers:
+        batch["enc_input"] = enc_input
+    logits, cache = prefill(params, batch, cfg,
+                            max_len=S + max_new_tokens, ctx=ctx)
+    enc = None
+    if cfg.encoder_layers:
+        from repro.models.model import encode
+        enc = encode(params, enc_input, cfg, ctx)
+
+    step_fn = jax.jit(partial(decode_step, cfg=cfg, ctx=ctx))
+    toks = [prompt]
+    cur = _sample(logits[:, -1], temperature, key)
+    for t in range(max_new_tokens):
+        toks.append(cur)
+        if t == max_new_tokens - 1:
+            break
+        logits, cache = (step_fn(params, cur, cache, enc=enc)
+                         if enc is not None else
+                         step_fn(params, cur, cache))
+        if key is not None:
+            key, _ = jax.random.split(key)
+        cur = _sample(logits[:, -1], temperature, key)
+    return jnp.concatenate(toks, axis=1)
+
+
+def _sample(logits: Array, temperature: float,
+            key: Optional[Array]) -> Array:
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,84 @@
+"""AdamW built from scratch (no optax in this container) with fp32 master
+weights, global-norm clipping, and warmup-cosine schedule. Optimizer state
+inherits the parameters' sharding (ZeRO: fully sharded moments)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(step: Array, c: OptConfig) -> Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(c.warmup_steps, 1))
+    t = jnp.clip((step - c.warmup_steps)
+                 / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return c.lr * warm * cos
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    }
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _is_matrix(p: Array) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(grads: Any, state: Dict[str, Any], c: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
+    """Returns (new bf16/model-dtype params, new state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-9))
+    lr = schedule(step, c)
+    b1, b2 = c.betas
+    t = (step + 1).astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        u = corr * m2 / (jnp.sqrt(v2) + c.eps)
+        if _is_matrix(w):
+            u = u + c.weight_decay * w
+        return m2, v2, w - lr * u
+
+    flat, treedef = jax.tree.flatten(grads)
+    ms = treedef.flatten_up_to(state["m"])
+    vs = treedef.flatten_up_to(state["v"])
+    ws = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat, ms, vs, ws)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_w = treedef.unflatten([o[2] for o in out])
+    new_state = {"step": step + 1, "m": new_m, "v": new_v, "master": new_w}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_w, new_state, metrics

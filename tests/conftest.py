@@ -1,0 +1,15 @@
+"""Test session config.
+
+REPRO_TEST_DEVICES=N forces N host devices (for tests/test_distributed.py:
+MoE expert-parallel paths, DDP + gradient compression, elastic restore).
+Must be set before jax initializes -- conftest import time is safe.
+The dry-run (launch/dryrun.py) manages its own 512-device flag; benches
+and default test runs see 1 device.
+"""
+import os
+
+n = os.environ.get("REPRO_TEST_DEVICES")
+if n:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}")

@@ -1,0 +1,135 @@
+"""Per-kernel allclose vs the ref.py oracles + hypothesis shape/dtype sweeps.
+
+Kernels run in Pallas interpret mode on CPU (the TPU BlockSpec pipeline is
+executed in Python), oracles are the pure-jnp core pipeline.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.hog_gradient import hog_gradient
+from repro.kernels.cell_hist import cell_hist
+from repro.kernels.block_norm import block_norm
+from repro.kernels.svm_matmul import svm_scores
+from repro.kernels.fused_hog import fused_hog
+from repro.core.hog import PAPER_HOG
+
+RNG = np.random.default_rng(1234)
+
+
+def _windows(b, h=130, w=66):
+    return jnp.asarray(RNG.integers(0, 256, size=(b, h, w)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- gradient
+@pytest.mark.parametrize("mode", ["sector", "cordic"])
+def test_hog_gradient_matches_ref(mode):
+    g = _windows(4)
+    mag_k, bin_k = hog_gradient(g, mode=mode)
+    mag_r, bin_r = ref.hog_gradient_ref(g, mode=mode)
+    np.testing.assert_allclose(mag_k, mag_r, rtol=1e-5, atol=1e-4)
+    assert int(jnp.sum(bin_k != bin_r)) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 6), h=st.integers(12, 80), w=st.integers(12, 80))
+def test_hog_gradient_shape_sweep(b, h, w):
+    g = _windows(b, h, w)
+    mag_k, bin_k = hog_gradient(g, mode="sector", block_b=4)
+    mag_r, bin_r = ref.hog_gradient_ref(g, mode="sector")
+    np.testing.assert_allclose(mag_k, mag_r, rtol=1e-5, atol=1e-4)
+    assert int(jnp.sum(bin_k != bin_r)) == 0
+    assert int(jnp.min(bin_k)) >= 0 and int(jnp.max(bin_k)) <= 8
+
+
+# --------------------------------------------------------------- histogram
+def test_cell_hist_matches_ref():
+    g = _windows(4)
+    mag, b = ref.hog_gradient_ref(g, mode="sector")
+    hk = cell_hist(mag, b)
+    hr = ref.cell_hist_ref(mag, b)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-4)
+
+
+def test_cell_hist_conserves_magnitude():
+    """Histogram sum == total magnitude (hard binning conserves mass)."""
+    g = _windows(3)
+    mag, b = ref.hog_gradient_ref(g, mode="sector")
+    hk = cell_hist(mag, b)
+    np.testing.assert_allclose(jnp.sum(hk, axis=(1, 2, 3)),
+                               jnp.sum(mag, axis=(1, 2)), rtol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(b=st.integers(1, 4), ch=st.integers(2, 6), cw=st.integers(2, 6))
+def test_cell_hist_shape_sweep(b, ch, cw):
+    mag = jnp.asarray(RNG.random((b, ch * 8, cw * 8)).astype(np.float32))
+    bi = jnp.asarray(RNG.integers(0, 9, size=(b, ch * 8, cw * 8)).astype(np.int32))
+    hk = cell_hist(mag, bi, block_b=2)
+    hr = ref.cell_hist_ref(mag, bi)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------------- block norm
+@pytest.mark.parametrize("mode", ["rsqrt", "nr"])
+def test_block_norm_matches_ref(mode):
+    hist = jnp.asarray(RNG.random((4, 16, 8, 9)).astype(np.float32) * 40)
+    bk = block_norm(hist, mode=mode)
+    br = ref.block_norm_ref(hist, mode=mode)
+    np.testing.assert_allclose(bk, br, rtol=1e-4, atol=1e-5)
+
+
+def test_block_norm_unit_energy():
+    """Normalized blocks have ||v|| <= 1 (eq. 5 bounds the energy)."""
+    hist = jnp.asarray(RNG.random((2, 16, 8, 9)).astype(np.float32) * 100)
+    bk = block_norm(hist)
+    norms = jnp.sqrt(jnp.sum(bk * bk, axis=-1))
+    assert float(jnp.max(norms)) <= 1.0 + 1e-5
+
+
+# --------------------------------------------------------------------- svm
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 20), f=st.sampled_from([37, 128, 1000, 3780]))
+def test_svm_scores_sweep(b, f):
+    x = jnp.asarray(RNG.normal(size=(b, f)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=f).astype(np.float32))
+    bias = jnp.float32(RNG.normal())
+    sk = svm_scores(x, w, bias)
+    sr = ref.svm_scores_ref(x, w, bias)
+    np.testing.assert_allclose(sk, sr, rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------------- fused
+@pytest.mark.parametrize("mode", ["sector", "cordic"])
+def test_fused_hog_matches_ref(mode):
+    g = _windows(4)
+    dk = fused_hog(g, mode=mode)
+    dr = ref.fused_hog_ref(g, mode=mode)
+    np.testing.assert_allclose(dk, dr, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_matches_staged_pipeline():
+    win = jnp.asarray(RNG.integers(0, 256, size=(6, 130, 66, 3)).astype(np.uint8))
+    np.testing.assert_allclose(ops.hog_descriptor_fused(win),
+                               ops.hog_descriptor_kernel(win),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_path_matches_ref_path():
+    """End-to-end: kernel path == software path (the ModelSim-vs-Matlab
+    equivalence check from the paper, on TPU kernels)."""
+    from repro.core.pipeline import classify_windows
+    from repro.core.svm import init_svm
+    win = jnp.asarray(RNG.integers(0, 256, size=(6, 130, 66, 3)).astype(np.uint8))
+    w = jnp.asarray(RNG.normal(size=3780).astype(np.float32) * 0.02)
+    params = {"w": w, "b": jnp.float32(0.1)}
+    out_ref = classify_windows(params, win, path="ref")
+    out_k = classify_windows(params, win, path="kernel")
+    out_f = classify_windows(params, win, path="fused")
+    np.testing.assert_allclose(out_ref["score"], out_k["score"], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(out_ref["score"], out_f["score"], rtol=1e-3, atol=1e-3)
+    assert (np.asarray(out_ref["human"]) == np.asarray(out_k["human"])).all()
+    assert (np.asarray(out_ref["human"]) == np.asarray(out_f["human"])).all()

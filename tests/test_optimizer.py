@@ -1,0 +1,88 @@
+"""Optimizer + schedule + checkpoint (single-device parts) + property tests."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
+                                   init_opt_state, schedule)
+
+
+def _quad_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(0.5)}
+
+
+def test_adamw_minimizes_quadratic():
+    params = _quad_params()
+    state = init_opt_state(params)
+    c = OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                  weight_decay=0.0, clip_norm=1e9)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, c)
+    assert float(loss(params)) < 1e-2
+
+
+def test_warmup_cosine_schedule():
+    c = OptConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(schedule(jnp.int32(0), c)) == pytest.approx(0.1, abs=1e-6)
+    assert float(schedule(jnp.int32(9), c)) == pytest.approx(1.0, abs=1e-6)
+    # end of schedule decays to min_lr_frac
+    assert float(schedule(jnp.int32(109), c)) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_clip_caps_update_norm():
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    c = OptConfig(lr=1.0, clip_norm=1.0, warmup_steps=1, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, state2, metrics = adamw_update(g, state, c)
+    assert float(metrics["grad_norm"]) > 1e5
+    # clipped: first moment bounded by (1-b1)*clip-scaled grad
+    assert float(jnp.max(jnp.abs(state2["m"]["w"]))) < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3))
+def test_global_norm_homogeneous(scale):
+    t = {"a": jnp.asarray([1.0, 2.0]), "b": jnp.asarray([[2.0]])}
+    n1 = float(global_norm(t))
+    n2 = float(global_norm(jax.tree.map(lambda x: x * scale, t)))
+    assert n2 == pytest.approx(n1 * scale, rel=1e-4)
+
+
+def test_checkpoint_roundtrip_single_device(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"layers": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "step": jnp.int32(3)}
+    mgr.save(7, tree)
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          tree)
+    out = mgr.restore(7, target)
+    np.testing.assert_array_equal(np.asarray(out["layers"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+    assert int(out["step"]) == 3
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, {"w": jnp.ones(3)})
+    entries = os.listdir(tmp_path)
+    assert "step_00000001" in entries
+    assert not any(e.endswith(".tmp") for e in entries)
+
+
+def test_quantize_roundtrip_property():
+    from repro.train.grad_compress import _dequantize, _quantize
+    x = jnp.asarray(np.random.default_rng(0).normal(size=5000)
+                    .astype(np.float32))
+    q, s = _quantize(x)
+    err = np.asarray(x - _dequantize(q, s, x.shape[0]))
+    blk_scale = np.asarray(s).max()
+    assert np.max(np.abs(err)) <= blk_scale * 0.51  # half-ULP of int8 grid

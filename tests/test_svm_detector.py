@@ -1,0 +1,138 @@
+"""SVM training, detector, data pipeline, serving engine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.svm import (SVMTrainConfig, accuracy_table, hinge_loss,
+                            init_svm, predict, svm_score, train_svm)
+from repro.core.detector import DetectorConfig, _nms, detect, score_map
+from repro.core.hog import PAPER_HOG, hog_descriptor
+from repro.data.synth_pedestrian import (PedestrianDataConfig, make_dataset,
+                                         make_scene, make_windows)
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------- SVM
+def test_svm_learns_separable():
+    n, f = 512, 64
+    w_true = RNG.normal(size=f).astype(np.float32)
+    x = RNG.normal(size=(n, f)).astype(np.float32)
+    y = (x @ w_true > 0).astype(np.int32)
+    params, losses = train_svm(jnp.asarray(x), jnp.asarray(y),
+                               SVMTrainConfig(steps=800, lam=1e-5))
+    acc = accuracy_table(params, jnp.asarray(x), jnp.asarray(y))
+    assert acc["total_acc"] > 0.97
+    assert losses[-1] < losses[0]
+
+
+def test_hinge_loss_zero_for_perfect_margin():
+    params = {"w": jnp.asarray([10.0, 0.0]), "b": jnp.asarray(0.0)}
+    x = jnp.asarray([[1.0, 0.0], [-1.0, 0.0]])
+    y = jnp.asarray([1.0, -1.0])
+    loss = hinge_loss(params, x, y, lam=0.0)
+    assert float(loss) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(nw=st.floats(0.5, 8.0))
+def test_class_weight_monotone_effect(nw):
+    """Higher neg_weight never hurts negative-class accuracy on a
+    fixed imbalanced problem (property of weighted hinge)."""
+    n, f = 256, 16
+    x = RNG.normal(size=(n, f)).astype(np.float32)
+    w_true = RNG.normal(size=f).astype(np.float32)
+    y = (x @ w_true > -0.8).astype(np.int32)   # imbalanced positives
+    p1, _ = train_svm(jnp.asarray(x), jnp.asarray(y),
+                      SVMTrainConfig(steps=300, neg_weight=1.0, seed=1))
+    p2, _ = train_svm(jnp.asarray(x), jnp.asarray(y),
+                      SVMTrainConfig(steps=300, neg_weight=nw, seed=1))
+    a1 = accuracy_table(p1, jnp.asarray(x), jnp.asarray(y))
+    a2 = accuracy_table(p2, jnp.asarray(x), jnp.asarray(y))
+    if nw >= 1.0:
+        assert a2["without_person_acc"] >= a1["without_person_acc"] - 0.05
+
+
+def test_sign_rule_eq7():
+    params = {"w": jnp.asarray([1.0]), "b": jnp.asarray(-0.5)}
+    x = jnp.asarray([[1.0], [0.0]])
+    np.testing.assert_array_equal(np.asarray(predict(params, x)), [1, 0])
+
+
+# -------------------------------------------------------------- detector
+def test_score_map_matches_per_window_scores():
+    """Dense conv score map == per-window descriptor @ w (the detector's
+    core claim: block norm is window-independent)."""
+    gray = jnp.asarray(RNG.integers(0, 256, (200, 150)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=3780).astype(np.float32) * 0.02)
+    b = jnp.float32(0.1)
+    sm = score_map(gray, w, b, PAPER_HOG)
+    # check a few window positions at 8px stride
+    for (i, j) in [(0, 0), (3, 2), (5, 7)]:
+        win = gray[i * 8:i * 8 + 130, j * 8:j * 8 + 66]
+        d = hog_descriptor(win[None], PAPER_HOG)[0]
+        want = float(d @ w + b)
+        np.testing.assert_allclose(float(sm[i, j]), want, rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_nms_removes_overlaps():
+    boxes = np.asarray([[0, 0, 10, 10], [1, 1, 11, 11], [50, 50, 60, 60]],
+                       np.float32)
+    scores = np.asarray([0.9, 0.8, 0.7])
+    keep = _nms(boxes, scores, 0.3)
+    assert keep == [0, 2]
+
+
+def test_detect_finds_planted_person():
+    """End-to-end: train a quick SVM, detect a planted pedestrian."""
+    rng = np.random.default_rng(3)
+    cfg = PedestrianDataConfig(n_pos=400, n_neg=300)
+    x, y = make_windows(400, 300, cfg, rng)
+    f = hog_descriptor(jnp.asarray(x), PAPER_HOG)
+    svm, _ = train_svm(f, jnp.asarray(y),
+                       SVMTrainConfig(steps=1200, neg_weight=6.0))
+    scene, true_boxes = make_scene(rng, 280, 200, n_people=1)
+    dets = detect(scene, svm, DetectorConfig(scales=(1.0,),
+                                             score_threshold=0.0))
+    assert dets, "no detections at all"
+    ty, tx, th, tw = true_boxes[0]
+    best = max(dets, key=lambda d: d["score"])
+    y0, x0, _, _ = best["box"]
+    # top detection within one cell-stride neighborhood of the plant
+    assert abs(y0 - ty) <= 24 and abs(x0 - tx) <= 24, (best, true_boxes)
+
+
+# ------------------------------------------------------------------ data
+def test_dataset_shapes_and_split():
+    cfg = PedestrianDataConfig(n_pos=20, n_neg=10, n_test_pos=8,
+                               n_test_neg=6)
+    x_tr, y_tr, x_te, y_te = make_dataset(cfg)
+    assert x_tr.shape == (30, 130, 66, 3) and x_tr.dtype == np.uint8
+    assert int(y_tr.sum()) == 20
+    assert x_te.shape == (14, 130, 66, 3)
+    assert int(y_te.sum()) == 8
+
+
+def test_dataset_deterministic():
+    cfg = PedestrianDataConfig(n_pos=5, n_neg=5, n_test_pos=2, n_test_neg=2)
+    a = make_dataset(cfg)
+    b = make_dataset(cfg)
+    for t1, t2 in zip(a, b):
+        np.testing.assert_array_equal(t1, t2)
+
+
+# ----------------------------------------------------------------- serve
+def test_detection_service_batches():
+    from repro.serve.engine import DetectionService
+    svm = init_svm(3780)
+    svc = DetectionService(svm, batch_size=8, max_wait_ms=5.0).start()
+    wins = [RNG.integers(0, 256, (130, 66, 3)).astype(np.uint8)
+            for _ in range(20)]
+    res = svc.detect(wins)
+    svc.stop()
+    assert len(res) == 20
+    assert all(r["human"] in (0, 1) for r in res)
+    assert svc.stats["requests"] == 20
