@@ -20,6 +20,8 @@ substrates as well).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -29,7 +31,7 @@ import numpy as np
 from repro.core.hog import PAPER_HOG, hog_descriptor
 from repro.core.pipeline import classify_windows
 from repro.core.svm import init_svm
-from repro.core.detector import score_map
+from repro.core.detector import DetectorConfig, FrameDetector, score_map
 
 
 def _time(fn, *args, iters=20, warmup=3):
@@ -86,7 +88,108 @@ def run(fast: bool = False):
           f"beyond-paper analogue of the 54x")
     print(f"table2/tpu_roofline_ns_per_window,60.5,"
           f"vs paper 757000 ns (dryrun hog cell)")
-    return {"speedup": t_sw / t_scene}
+
+    det = run_detect(fast=fast)
+    return {"speedup": t_sw / t_scene, "detect": det}
+
+
+# ----------------------------------------------------------- multi-scale
+# Dense device-resident detection vs. the per-window-recompute baseline
+# (slice every window position at 8-px stride per pyramid scale, HOG each
+# window independently). This is the beyond-paper detection hot path the
+# refactor targets; BENCH_detect.json records the trajectory.
+
+def _per_window_recompute(frame: np.ndarray, svm, per_scale,
+                          batch: int = 512) -> int:
+    """The naive baseline: re-extract HOG for every window of every
+    pyramid scale independently (no dense sharing). `per_scale` is the
+    detector program's own (scale, PH, PW) geometry (FrameProgram.per_scale),
+    so both paths score exactly the same window positions. Returns #windows."""
+    fn = jax.jit(lambda x: classify_windows(svm, x)["score"])
+    n_windows = 0
+    hcfg = PAPER_HOG
+    h, w = frame.shape[:2]
+    for s, ph, pw in per_scale:
+        g = np.asarray(jax.image.resize(jnp.asarray(frame, jnp.float32),
+                                        (int(h * s), int(w * s), 3),
+                                        "linear"))
+        wins = np.empty((ph * pw, hcfg.window_h, hcfg.window_w, 3),
+                        np.float32)
+        for i in range(ph):
+            for j in range(pw):
+                wins[i * pw + j] = g[i * 8:i * 8 + hcfg.window_h,
+                                     j * 8:j * 8 + hcfg.window_w]
+        for k in range(0, len(wins), batch):
+            chunk = wins[k:k + batch]
+            if len(chunk) < batch:            # pad to the compiled batch
+                chunk = np.concatenate(
+                    [chunk, np.zeros((batch - len(chunk),) + chunk.shape[1:],
+                                     np.float32)])
+            jax.block_until_ready(fn(jnp.asarray(chunk)))
+        n_windows += ph * pw
+    return n_windows
+
+
+def run_detect(fast: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32)) * .01,
+           "b": jnp.float32(0.0)}
+    sizes = [(480, 640)] if fast else [(480, 640), (720, 1280)]
+    scales = (1.0, 0.8, 0.64)
+    results = {}
+    print("# multi-scale detection -- dense device-resident vs "
+          "per-window recompute")
+    for (h, w) in sizes:
+        frame = rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+        det = FrameDetector(svm, DetectorConfig(scales=scales,
+                                                score_threshold=0.0))
+        prog, ph_pad, pw_pad = det.program_for(h, w)  # shared geometry
+        n_windows = prog.n_positions
+        # the program geometry is in padded-frame coords; give the
+        # baseline the identically padded frame so both paths score
+        # exactly the same window positions
+        frame_padded = np.pad(frame, ((0, ph_pad - h), (0, pw_pad - w),
+                                      (0, 0)), mode="edge")
+
+        det(frame)                                   # compile warmup
+        iters = 3 if fast else 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            det(frame)
+        t_dense = (time.perf_counter() - t0) / iters
+
+        t0 = time.perf_counter()
+        _per_window_recompute(frame_padded, svm, prog.per_scale)  # + compile
+        t_base_c = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _per_window_recompute(frame_padded, svm, prog.per_scale)
+        t_base = time.perf_counter() - t0
+
+        key = f"{w}x{h}"
+        results[key] = {
+            "n_windows": int(n_windows),
+            "dense_ms_per_frame": t_dense * 1e3,
+            "dense_windows_per_s": n_windows / t_dense,
+            "per_window_ms_per_frame": t_base * 1e3,
+            "per_window_windows_per_s": n_windows / t_base,
+            "speedup_dense_vs_per_window": t_base / t_dense,
+        }
+        print(f"detect/{key}_windows,{n_windows},per frame x{len(scales)} "
+              f"scales")
+        print(f"detect/{key}_dense_ms,{t_dense*1e3:.1f},"
+              f"{n_windows/t_dense:,.0f} windows/s")
+        print(f"detect/{key}_per_window_ms,{t_base*1e3:.1f},"
+              f"{n_windows/t_base:,.0f} windows/s "
+              f"(compile pass {t_base_c*1e3:.0f} ms)")
+        print(f"detect/{key}_speedup,{t_base/t_dense:.1f},"
+              f"dense vs per-window recompute")
+
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_detect.json"
+    payload = {"host": "cpu", "scales": list(scales),
+               "backend": "ref", "results": results}
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"detect/json,{out.name},written")
+    return results
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""Cross-version JAX compatibility shims.
+
+The repo targets the `jax.shard_map` public API (jax >= 0.5, `check_vma`
+kwarg). On the pinned container jax (0.4.x) that symbol lives at
+`jax.experimental.shard_map.shard_map` and the kwarg is `check_rep`.
+Import `shard_map` from here everywhere so call sites stay on the new
+spelling.
+"""
+from __future__ import annotations
+
+import functools
+
+try:                                    # jax >= 0.5
+    from jax import shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+__all__ = ["shard_map"]

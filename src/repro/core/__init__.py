@@ -5,5 +5,7 @@ from repro.core.hog import (HOGConfig, PAPER_HOG, hog_descriptor,
 from repro.core.cordic import cordic_mag_angle, cordic_gain
 from repro.core.svm import (SVMParams, SVMTrainConfig, init_svm, svm_score,
                             predict, hinge_loss, train_svm, accuracy_table)
-from repro.core.detector import DetectorConfig, detect, score_map
+from repro.core.detector import (DetectorConfig, FrameDetector, detect,
+                                 scene_blocks, score_map)
 from repro.core.pipeline import classify_windows, extract_features
+from repro.core.stages import dense_blocks, window_blocks, window_descriptor

@@ -1,35 +1,45 @@
-"""Multi-scale sliding-window human detector.
+"""Multi-scale sliding-window human detector -- device-resident end-to-end.
 
 The paper's hardware detects a single fixed 130x66 window; multi-window /
-multi-resolution detection is listed as "future development". This module
-is that future development, built TPU-natively:
+multi-resolution detection is listed as "future development" (§VI). This
+module is that future development, built TPU-natively on the staged HOG
+pipeline (core/stages.py):
 
-  * The paper's block normalization (eq. 5) is *window-independent* (each
-    2x2-cell block normalizes by its own energy), so the scene's normalized
-    block grid can be computed ONCE and shared by every window.
-  * A window's SVM score is then a dot product between its 15x7 block
-    patch and the weight tensor -- i.e. the whole score map is a single
-    valid-mode convolution, which XLA lowers to MXU matmuls:
-        scores = conv2d(blocks_(BH,BW,36), W_(15,7,36)) + b
-    One conv scores every window position at 8-px stride simultaneously,
-    amortizing HOG across overlapping windows (the classical dense-HOG
-    trick; a large win over the paper's per-window recompute -- quantified
-    in benchmarks/bench_timing.py).
-  * Multi-scale: image pyramid via jax.image.resize, per-scale score maps,
-    box extraction + NMS on host.
+  * Block normalization (eq. 5) is *window-independent*, so the scene's
+    normalized block grid is computed ONCE (dense layout, any backend:
+    ref | kernel | fused) and shared by every window. A window's SVM
+    score is a dot product between its 15x7 block patch and the weight
+    tensor -- the whole score map is one valid-mode convolution that XLA
+    lowers to MXU matmuls.
+  * Multi-scale is ONE compiled program per frame-shape bucket: frames
+    are padded up to a bucket shape, the image pyramid + dense scoring
+    for every scale is unrolled inside a single jit, thresholding and
+    top-k run device-side, and NMS is a vectorized matrix-IoU greedy
+    pass (fori_loop over the fixed top-k, O(K) vector work per step --
+    no O(N^2) host Python loop, no per-frame retrace).
+  * Only box DECODE stays on host: top-k indices select rows of a
+    static per-bucket box table (pure geometry, precomputed in numpy).
+
+`detect()` keeps the original host-facing contract (list of dicts) with
+one deliberate change: the device program considers at most
+`max_detections` top-scoring candidates per frame (fixed K keeps the
+shapes static); saturating that cap emits a RuntimeWarning.
+`FrameDetector` is the reusable device-program handle the serving layer
+uses (serve/engine.py full-frame requests).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
+from functools import lru_cache, partial
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hog import (HOGConfig, PAPER_HOG, block_normalize,
-                            cell_histograms, gradients, grayscale, _MAG_BIN)
+from repro.core.hog import HOGConfig, PAPER_HOG, grayscale
+from repro.core.stages import dense_blocks
 from repro.core.svm import SVMParams
 
 Array = jax.Array
@@ -41,41 +51,80 @@ class DetectorConfig:
     scales: Tuple[float, ...] = (1.0, 0.8, 0.64)
     score_threshold: float = 0.0          # sign(D(x)) per eq. (7)
     nms_iou: float = 0.3
+    max_detections: int = 256             # device top-k size (K)
+    backend: str = "ref"                  # stage backend for dense HOG
+    shape_bucket: int = 32                # frames pad up to multiples of this
 
 
-def scene_blocks(gray: Array, cfg: HOGConfig) -> Array:
-    """Whole-scene normalized block grid: (H, W) -> (BH, BW, 36)."""
-    fx, fy = gradients(gray.astype(jnp.float32))
-    mag, b = _MAG_BIN[cfg.mode](fx, fy, cfg.bins)
-    # trim so the gradient field tiles into whole cells
-    gh = (mag.shape[-2] // cfg.cell) * cfg.cell
-    gw = (mag.shape[-1] // cfg.cell) * cfg.cell
-    mag, b = mag[..., :gh, :gw], b[..., :gh, :gw]
-    scene_cfg = dataclasses.replace(cfg, window_h=gh + 2, window_w=gw + 2)
-    hist = cell_histograms(mag, b, scene_cfg)
-    return block_normalize(hist, scene_cfg)
+def scene_blocks(gray: Array, cfg: HOGConfig,
+                 backend: str = "ref") -> Array:
+    """Whole-scene normalized block grid: (H, W) -> (BH, BW, 36).
+
+    Thin view over the dense layout of the staged pipeline; `backend`
+    selects ref (pure jnp) or the Pallas kernel/fused implementations.
+    """
+    return dense_blocks(gray, cfg, backend)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "backend"))
 def score_map(gray: Array, w: Array, b: Array,
-              cfg: HOGConfig = PAPER_HOG) -> Array:
-    """Dense SVM score map at 8-px stride. gray: (H, W) -> (PH, PW).
+              cfg: HOGConfig = PAPER_HOG, backend: str = "ref") -> Array:
+    """Dense SVM score map at cell (8-px) stride. gray: (H, W) -> (PH, PW).
 
     score[i, j] = <blocks[i:i+15, j:j+7, :], W> + b  == valid conv.
     """
-    blocks = scene_blocks(gray, cfg)                    # (BH, BW, 36)
+    blocks = scene_blocks(gray, cfg, backend)           # (BH, BW, 36)
     bh, bw = cfg.blocks_hw                              # 15, 7
-    wk = w.reshape(bh, bw, cfg.block_dim)               # (15, 7, 36)
+    wk = w.reshape(bh, bw, cfg.block_dim).astype(blocks.dtype)
     out = jax.lax.conv_general_dilated(
         blocks[None],                                   # NHWC
         wk[..., None],                                  # HWIO (36 -> 1)
         window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
     return out[0, :, :, 0] + b
 
 
+# ------------------------------------------------------------------- NMS
+
+def matrix_iou(a: Array, b: Array) -> Array:
+    """Pairwise IoU. a: (N, 4), b: (M, 4) as (y0, x0, y1, x1) -> (N, M)."""
+    y0 = jnp.maximum(a[:, None, 0], b[None, :, 0])
+    x0 = jnp.maximum(a[:, None, 1], b[None, :, 1])
+    y1 = jnp.minimum(a[:, None, 2], b[None, :, 2])
+    x1 = jnp.minimum(a[:, None, 3], b[None, :, 3])
+    inter = jnp.maximum(y1 - y0, 0.0) * jnp.maximum(x1 - x0, 0.0)
+    area_a = (a[:, 2] - a[:, 0]) * (a[:, 3] - a[:, 1])
+    area_b = (b[:, 2] - b[:, 0]) * (b[:, 3] - b[:, 1])
+    return inter / jnp.maximum(area_a[:, None] + area_b[None, :] - inter,
+                               1e-9)
+
+
+def nms_keep(boxes: Array, scores: Array, iou_thr: float) -> Array:
+    """Vectorized greedy NMS, device-resident.
+
+    boxes (K, 4) must be sorted by descending score (lax.top_k order);
+    entries with score == -inf are invalid and never kept. The IoU
+    matrix is computed once; the greedy dependency runs as a fori_loop
+    over the FIXED K with O(K) vector work per step, so the whole pass
+    stays on device with a static shape -- exact same keep set as the
+    host greedy reference (tests/test_stages_detector.py).
+    """
+    k = boxes.shape[0]
+    iou = matrix_iou(boxes, boxes)
+    valid = jnp.isfinite(scores)
+    rank = jnp.arange(k)
+
+    def body(i, keep):
+        suppressed = jnp.any(keep & (iou[:, i] > iou_thr) & (rank < i))
+        return keep.at[i].set(valid[i] & ~suppressed)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((k,), bool))
+
+
 def _nms(boxes: np.ndarray, scores: np.ndarray, iou_thr: float) -> List[int]:
-    """Greedy NMS on host. boxes: (N, 4) as (y0, x0, y1, x1)."""
+    """Greedy NMS on host -- the O(N^2) Python reference the vectorized
+    `nms_keep` is validated against. boxes: (N, 4) as (y0, x0, y1, x1)."""
     order = np.argsort(-scores)
     keep: List[int] = []
     while order.size:
@@ -96,31 +145,145 @@ def _nms(boxes: np.ndarray, scores: np.ndarray, iou_thr: float) -> List[int]:
     return keep
 
 
+# -------------------------------------------- per-bucket compiled program
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b if b > 1 else a
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameProgram:
+    """One compiled multi-scale program + its static decode tables."""
+
+    fn: "jax.stages.Wrapped"       # (gray_pad, w, b, hw) -> (scores, idx, keep)
+    boxes: np.ndarray              # (N, 4) window boxes in frame coords
+    scales: np.ndarray             # (N,) nominal pyramid scale per row
+    n_positions: int               # N: total window positions, all scales
+    k: int                         # top-k size
+    per_scale: Tuple[Tuple[float, int, int], ...] = ()
+    #                (scale, score-map PH, score-map PW) per pyramid level
+
+
+@lru_cache(maxsize=64)
+def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
+    """Build the compiled program for padded frame shape (ph, pw).
+
+    Everything shape-dependent is static here: the per-scale pyramid
+    shapes, the flattened box table (pure geometry -> numpy, baked as a
+    jit constant for the device-side gather), and K.
+    """
+    hcfg = cfg.hog
+    specs: List[Tuple[int, int, float]] = []
+    for s in cfg.scales:
+        sh, sw = int(ph * s), int(pw * s)
+        if sh >= hcfg.window_h and sw >= hcfg.window_w:
+            specs.append((sh, sw, s))
+
+    cell = hcfg.cell
+    wbh, wbw = hcfg.blocks_hw                       # 15, 7 window blocks
+    box_rows, scale_rows = [], []
+    per_scale = []
+    for sh, sw, s in specs:
+        gh, gw = (sh - 2) // cell * cell, (sw - 2) // cell * cell
+        sbh, sbw = gh // cell - hcfg.block + 1, gw // cell - hcfg.block + 1
+        sph, spw = sbh - wbh + 1, sbw - wbw + 1     # score-map shape
+        per_scale.append((s, sph, spw))
+        # exact per-axis resize factor of the padded frame
+        sy, sx = sh / ph, sw / pw
+        ys, xs = np.mgrid[0:sph, 0:spw].astype(np.float64)
+        y0, x0 = ys * cell / sy, xs * cell / sx
+        boxes = np.stack([y0, x0, y0 + hcfg.window_h / sy,
+                          x0 + hcfg.window_w / sx], axis=-1)
+        box_rows.append(boxes.reshape(-1, 4).astype(np.float32))
+        scale_rows.append(np.full(sph * spw, s, np.float32))
+
+    if not box_rows:
+        return FrameProgram(None, np.zeros((0, 4), np.float32),
+                            np.zeros((0,), np.float32), 0, 0, ())
+
+    boxes_tab = np.concatenate(box_rows)
+    scale_tab = np.concatenate(scale_rows)
+    n = len(boxes_tab)
+    k = min(cfg.max_detections, n)
+    boxes_dev = jnp.asarray(boxes_tab)
+
+    def fn(gray: Array, w: Array, b: Array, hw: Array):
+        parts = []
+        for sh, sw, _ in specs:
+            g = gray if (sh, sw) == (ph, pw) else \
+                jax.image.resize(gray, (sh, sw), "linear")
+            parts.append(score_map(g, w, b, hcfg, cfg.backend).reshape(-1))
+        scores = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        # windows must lie inside the TRUE (unpadded) frame and clear
+        # the score threshold; both masks applied device-side
+        inside = (boxes_dev[:, 2] <= hw[0] + 1e-4) \
+            & (boxes_dev[:, 3] <= hw[1] + 1e-4)
+        valid = inside & (scores > cfg.score_threshold)
+        top, idx = jax.lax.top_k(jnp.where(valid, scores, -jnp.inf), k)
+        keep = nms_keep(boxes_dev[idx], top, cfg.nms_iou)
+        return top, idx, keep, jnp.sum(valid)
+
+    return FrameProgram(jax.jit(fn), boxes_tab, scale_tab, n, k,
+                        tuple(per_scale))
+
+
+class FrameDetector:
+    """Reusable handle: SVM params + config -> per-frame detections.
+
+    Compiles once per frame-shape bucket (shape_bucket rounding), then
+    every call on a same-bucket frame reuses the device program with no
+    retrace; only the final box decode touches host numpy.
+    """
+
+    def __init__(self, svm: SVMParams, cfg: DetectorConfig = DetectorConfig()):
+        self.svm = svm
+        self.cfg = cfg
+
+    def program_for(self, h: int, w: int) -> Tuple[FrameProgram, int, int]:
+        b = max(1, self.cfg.shape_bucket)
+        return _frame_program(_round_up(h, b), _round_up(w, b),
+                              self.cfg), _round_up(h, b), _round_up(w, b)
+
+    def __call__(self, image: Array) -> List[dict]:
+        gray = jnp.asarray(image)
+        if gray.ndim == 3:
+            gray = grayscale(gray)
+        gray = gray.astype(jnp.float32)
+        h, w = int(gray.shape[0]), int(gray.shape[1])
+        prog, ph, pw = self.program_for(h, w)
+        if prog.fn is None:
+            return []
+        if (ph, pw) != (h, w):
+            # edge-replicate so downscaling does not bleed zeros into
+            # the last valid windows near the pad seam
+            gray = jnp.pad(gray, ((0, ph - h), (0, pw - w)), mode="edge")
+        top, idx, keep, n_valid = prog.fn(gray, self.svm["w"],
+                                          self.svm["b"],
+                                          jnp.asarray([h, w], jnp.float32))
+        # host: decode kept indices against the static geometry tables
+        top, idx, keep = (np.asarray(top), np.asarray(idx),
+                          np.asarray(keep))
+        if int(n_valid) > prog.k:
+            # more candidates cleared the threshold than top-k slots:
+            # the tail was dropped before NMS -- raise
+            # cfg.max_detections if it matters
+            warnings.warn(
+                f"{int(n_valid)} detection candidates cleared the "
+                f"threshold but max_detections={prog.k}; the lowest-"
+                f"scoring {int(n_valid) - prog.k} were dropped before "
+                f"NMS (lowest kept score {top[-1]:.3f})",
+                RuntimeWarning, stacklevel=2)
+        out = []
+        for r in range(prog.k):
+            if keep[r] and np.isfinite(top[r]):
+                out.append({"box": tuple(float(v) for v in prog.boxes[idx[r]]),
+                            "score": float(top[r]),
+                            "scale": float(prog.scales[idx[r]])})
+        return out
+
+
 def detect(image_rgb: Array, svm: SVMParams,
            cfg: DetectorConfig = DetectorConfig()) -> List[dict]:
-    """Multi-scale detection. Returns [{box:(y0,x0,y1,x1), score, scale}]."""
-    gray = grayscale(jnp.asarray(image_rgb))
-    hh, ww = gray.shape
-    hcfg = cfg.hog
-    all_boxes, all_scores, all_scales = [], [], []
-    for s in cfg.scales:
-        sh, sw = int(hh * s), int(ww * s)
-        if sh < hcfg.window_h or sw < hcfg.window_w:
-            continue
-        g = jax.image.resize(gray, (sh, sw), "linear")
-        sm = np.asarray(score_map(g, svm["w"], svm["b"], hcfg))
-        ys, xs = np.where(sm > cfg.score_threshold)
-        for y, x in zip(ys, xs):
-            y0, x0 = y * hcfg.cell / s, x * hcfg.cell / s
-            all_boxes.append((y0, x0, y0 + hcfg.window_h / s,
-                              x0 + hcfg.window_w / s))
-            all_scores.append(sm[y, x])
-            all_scales.append(s)
-    if not all_boxes:
-        return []
-    boxes = np.asarray(all_boxes)
-    scores = np.asarray(all_scores)
-    keep = _nms(boxes, scores, cfg.nms_iou)
-    return [{"box": tuple(float(v) for v in boxes[i]),
-             "score": float(scores[i]), "scale": float(all_scales[i])}
-            for i in keep]
+    """Multi-scale detection. Returns [{box:(y0,x0,y1,x1), score, scale}]
+    sorted by descending score (top-k order)."""
+    return FrameDetector(svm, cfg)(image_rgb)

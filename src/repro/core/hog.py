@@ -231,7 +231,7 @@ def collate(blocks: Array, cfg: HOGConfig) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# end-to-end extractor
+# end-to-end extractor -- a thin view over the staged pipeline
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -240,15 +240,14 @@ def hog_descriptor(window: Array, cfg: HOGConfig = PAPER_HOG) -> Array:
 
     Crops the active region so any window >= (cfg.window_h, cfg.window_w)
     top-left-anchored works; the paper's window is exactly 130x66.
+    Smaller windows raise ValueError (at trace time).
+
+    The chain itself lives in core/stages.py (window layout, "ref"
+    backend); kernels/ops.py and detector.py instantiate the same stage
+    list with the Pallas backends / dense layout.
     """
-    gray = grayscale(window) if window.shape[-1] == 3 else window
-    gray = gray.astype(jnp.float32)
-    gray = gray[..., : cfg.active_h + 2, : cfg.active_w + 2]
-    fx, fy = gradients(gray)
-    mag, b = _MAG_BIN[cfg.mode](fx, fy, cfg.bins)
-    hist = cell_histograms(mag, b, cfg)
-    blocks = block_normalize(hist, cfg, use_nr=(cfg.mode == "cordic"))
-    return collate(blocks, cfg)
+    from repro.core.stages import window_descriptor
+    return window_descriptor(window, cfg, backend="ref")
 
 
 def hog_descriptor_batch(windows: Array, cfg: HOGConfig = PAPER_HOG) -> Array:

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.hog import HOGConfig, PAPER_HOG, hog_descriptor
+from repro.core.hog import HOGConfig, PAPER_HOG
 from repro.core.svm import SVMParams, svm_score
 
 Array = jax.Array
@@ -34,16 +34,13 @@ Array = jax.Array
 @partial(jax.jit, static_argnames=("cfg", "path"))
 def extract_features(windows: Array, cfg: HOGConfig = PAPER_HOG,
                      path: str = "ref") -> Array:
-    """(B, 130, 66, 3) uint8 -> (B, 3780) float32 descriptors."""
-    if path == "ref":
-        return hog_descriptor(windows, cfg)
-    if path == "kernel":
-        from repro.kernels import ops
-        return ops.hog_descriptor_kernel(windows, cfg)
-    if path == "fused":
-        from repro.kernels import ops
-        return ops.hog_descriptor_fused(windows, cfg)
-    raise ValueError(f"unknown path {path!r}")
+    """(B, 130, 66, 3) uint8 -> (B, 3780) float32 descriptors.
+
+    One stage chain (core/stages.py), three backends; windows smaller
+    than the configured geometry raise ValueError at trace time.
+    """
+    from repro.core.stages import window_descriptor
+    return window_descriptor(windows, cfg, backend=path)
 
 
 @partial(jax.jit, static_argnames=("cfg", "path"))

@@ -1,0 +1,235 @@
+"""The canonical HOG stage chain, instantiated per backend and layout.
+
+Every HOG consumer in the repo used to carry its own copy of the chain:
+`core/hog.py` (per-window, pure jnp), `core/detector.py:scene_blocks`
+(dense whole-scene, pure jnp) and `kernels/ops.py` (per-window, Pallas).
+This module is the single definition they all share now (DESIGN.md §3):
+
+    grayscale -> gradients -> mag/bin -> cell_histograms -> block_normalize
+
+*Backends* supply the stage implementations:
+
+  * "ref"    -- pure-jnp oracles from core/hog.py (mode per HOGConfig:
+               ref | cordic | sector),
+  * "kernel" -- staged Pallas kernels (gradient+bin, cell histogram,
+               block norm as separate pallas_calls),
+  * "fused"  -- the single fused Pallas kernel (all stages in VMEM).
+
+*Layouts* supply the geometry:
+
+  * window -- a batch of fixed windows; the active region is cropped to
+              `cfg` geometry and the block grid collates to a
+              (..., n_features) descriptor,
+  * dense  -- a whole scene; the gradient field is trimmed to whole
+              cells and the normalized block grid (..., BH, BW, 36) is
+              returned for dense convolution scoring (detector.py).
+
+Because block normalization (eq. 5) is window-independent, the two
+layouts agree wherever a window tiles onto the scene's cell grid --
+that equivalence is what makes dense detection exact, and it is tested
+per backend and per numerics mode in tests/test_stages_detector.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hog import (HOGConfig, PAPER_HOG, _MAG_BIN, block_normalize,
+                            cell_histograms, gradients, grayscale)
+
+Array = jax.Array
+
+#: The canonical stage order. `grayscale` is shared across backends
+#: (layout-independent); the remaining stages are backend-specific.
+STAGE_ORDER = ("grayscale", "grad_mag_bin", "cell_hist", "block_norm")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSet:
+    """One backend's implementation of the canonical chain.
+
+    Each stage callable takes the geometry-adjusted HOGConfig (window_h/
+    window_w describe the actual gray tile, so cells_hw/blocks_hw match
+    the data). `fused` short-circuits the whole chain in one call.
+    """
+
+    name: str
+    grad_mag_bin: Optional[Callable[[Array, HOGConfig],
+                                    Tuple[Array, Array]]] = None
+    cell_hist: Optional[Callable[[Array, Array, HOGConfig], Array]] = None
+    block_norm: Optional[Callable[[Array, HOGConfig], Array]] = None
+    fused: Optional[Callable[[Array, HOGConfig], Array]] = None
+
+
+# ---------------------------------------------------------------- backends
+
+def _use_nr(cfg: HOGConfig) -> bool:
+    # the paper's Newton-Raphson rsqrt unit belongs to the faithful
+    # (CORDIC) datapath; ref/sector use the native rsqrt
+    return cfg.mode == "cordic"
+
+
+def _kernel_mode(cfg: HOGConfig) -> str:
+    # the kernels implement the two hardware modes; "ref" maps to sector
+    # (bit-identical bins, see tests/test_kernels.py)
+    return "cordic" if cfg.mode == "cordic" else "sector"
+
+
+def _cast_feat(blocks: Array, cfg: HOGConfig) -> Array:
+    if cfg.feat_dtype == "bf16" and blocks.dtype != jnp.bfloat16:
+        return blocks.astype(jnp.bfloat16)
+    return blocks
+
+
+def _ref_grad_mag_bin(gray: Array, cfg: HOGConfig) -> Tuple[Array, Array]:
+    fx, fy = gradients(gray)
+    return _MAG_BIN[cfg.mode](fx, fy, cfg.bins)
+
+
+def _ref_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
+    return cell_histograms(mag, b, cfg)
+
+
+def _ref_block_norm(hist: Array, cfg: HOGConfig) -> Array:
+    return block_normalize(hist, cfg, use_nr=_use_nr(cfg))
+
+
+def _pallas_grad_mag_bin(gray: Array, cfg: HOGConfig) -> Tuple[Array, Array]:
+    from repro.kernels.hog_gradient import hog_gradient
+    return hog_gradient(gray, mode=_kernel_mode(cfg))
+
+
+def _pallas_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.cell_hist import cell_hist
+    return cell_hist(mag, b, cell=cfg.cell, bins=cfg.bins)
+
+
+def _pallas_block_norm(hist: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.block_norm import block_norm
+    out = block_norm(hist, block=cfg.block, eps=cfg.eps,
+                     mode=("nr" if _use_nr(cfg) else "rsqrt"))
+    return _cast_feat(out, cfg)
+
+
+def _pallas_fused(gray: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.fused_hog import fused_hog
+    desc = fused_hog(gray, cell=cfg.cell, block=cfg.block, bins=cfg.bins,
+                     eps=cfg.eps, mode=_kernel_mode(cfg))
+    bh, bw = cfg.blocks_hw
+    return _cast_feat(desc.reshape(desc.shape[0], bh, bw, cfg.block_dim),
+                      cfg)
+
+
+BACKENDS = {
+    "ref": StageSet("ref", _ref_grad_mag_bin, _ref_cell_hist,
+                    _ref_block_norm),
+    "kernel": StageSet("kernel", _pallas_grad_mag_bin, _pallas_cell_hist,
+                       _pallas_block_norm),
+    "fused": StageSet("fused", fused=_pallas_fused),
+}
+
+
+def get_backend(backend: str) -> StageSet:
+    try:
+        return BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown stage backend {backend!r}; "
+            f"expected one of {sorted(BACKENDS)}") from None
+
+
+# ------------------------------------------------------------- stage chain
+
+def run_stages(gray: Array, geom: HOGConfig, backend: str = "ref") -> Array:
+    """Run the canonical chain on prepared gray tiles.
+
+    gray: (B, geom.window_h', geom.window_w') f32 where the interior
+    (shape - 2) is a whole number of cells; `geom` is the geometry-
+    adjusted config (see `window_blocks` / `dense_blocks`).
+    Returns the normalized block grid (B, bh, bw, block_dim).
+    """
+    ss = get_backend(backend)
+    if ss.fused is not None:
+        return ss.fused(gray, geom)
+    mag, b = ss.grad_mag_bin(gray, geom)
+    hist = ss.cell_hist(mag, b, geom)
+    return ss.block_norm(hist, geom)
+
+
+# ------------------------------------------------------------------ layout
+
+def validate_window(window: Array, cfg: HOGConfig) -> None:
+    """Reject windows smaller than the configured detection window.
+
+    Anything >= (cfg.window_h, cfg.window_w) is top-left-anchored and
+    cropped; anything smaller used to be silently cropped into a garbage
+    descriptor -- now it raises.
+    """
+    spatial = window.shape[-3:-1] if window.shape[-1] == 3 \
+        else window.shape[-2:]
+    if len(spatial) < 2 or spatial[0] < cfg.window_h \
+            or spatial[1] < cfg.window_w:
+        raise ValueError(
+            f"window spatial shape {tuple(spatial)} is smaller than the "
+            f"configured detection window ({cfg.window_h}, {cfg.window_w}); "
+            f"HOG expects (..., H>={cfg.window_h}, W>={cfg.window_w}[, 3])")
+
+
+def _to_gray(x: Array) -> Array:
+    gray = grayscale(x) if x.shape[-1] == 3 else x
+    return gray.astype(jnp.float32)
+
+
+def _flatten_batch(x: Array):
+    """(..., H, W) -> ((B, H, W), unflatten) so Pallas backends see the
+    one-batch-axis contract regardless of the caller's leading dims."""
+    lead = x.shape[:-2]
+    flat = x.reshape((-1,) + x.shape[-2:])
+
+    def unflatten(y: Array) -> Array:
+        return y.reshape(lead + y.shape[1:])
+
+    return flat, unflatten
+
+
+def window_blocks(windows: Array, cfg: HOGConfig = PAPER_HOG,
+                  backend: str = "ref") -> Array:
+    """Window layout: (..., H, W[, 3]) -> (..., bh, bw, block_dim)."""
+    validate_window(windows, cfg)
+    gray = _to_gray(windows)[..., : cfg.active_h + 2, : cfg.active_w + 2]
+    geom = dataclasses.replace(cfg, window_h=cfg.active_h + 2,
+                               window_w=cfg.active_w + 2)
+    flat, unflatten = _flatten_batch(gray)
+    return unflatten(run_stages(flat, geom, backend))
+
+
+def window_descriptor(windows: Array, cfg: HOGConfig = PAPER_HOG,
+                      backend: str = "ref") -> Array:
+    """Window layout, collated: (..., H, W[, 3]) -> (..., n_features)."""
+    blocks = window_blocks(windows, cfg, backend)
+    return blocks.reshape(blocks.shape[:-3] + (cfg.n_features,))
+
+
+def dense_blocks(image: Array, cfg: HOGConfig = PAPER_HOG,
+                 backend: str = "ref") -> Array:
+    """Dense layout: (..., H, W[, 3]) -> (..., BH, BW, block_dim).
+
+    The gradient field is trimmed so it tiles into whole cells; the
+    resulting block grid is shared by every window position at cell
+    stride (the dense-HOG amortization, detector.py).
+    """
+    gray = _to_gray(image)
+    h, w = gray.shape[-2], gray.shape[-1]
+    gh = (h - 2) // cfg.cell * cfg.cell
+    gw = (w - 2) // cfg.cell * cfg.cell
+    if gh < cfg.cell * cfg.block or gw < cfg.cell * cfg.block:
+        raise ValueError(
+            f"scene spatial shape {(h, w)} is too small for even one "
+            f"{cfg.block}x{cfg.block}-cell block of {cfg.cell}px cells")
+    gray = gray[..., : gh + 2, : gw + 2]
+    geom = dataclasses.replace(cfg, window_h=gh + 2, window_w=gw + 2)
+    flat, unflatten = _flatten_batch(gray)
+    return unflatten(run_stages(flat, geom, backend))

@@ -3,54 +3,33 @@
 `hog_descriptor_kernel`  -- staged kernels (gradient -> hist -> norm)
 `hog_descriptor_fused`   -- single fused kernel (§Perf artifact)
 `svm_score_kernel`       -- MXU-tiled scoring
-All take the same HOGConfig as the pure-jnp path, so core/pipeline.py can
-switch paths with a string.
+
+Both HOG wrappers are thin views over the canonical stage chain in
+core/stages.py (window layout, "kernel" / "fused" backends) -- the same
+stage list that core/hog.py and the dense detector instantiate, so the
+implementations cannot drift.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.hog import HOGConfig, PAPER_HOG, grayscale
-from repro.kernels.hog_gradient import hog_gradient
-from repro.kernels.cell_hist import cell_hist
-from repro.kernels.block_norm import block_norm
+from repro.core.hog import HOGConfig, PAPER_HOG
+from repro.core.stages import window_descriptor
 from repro.kernels.svm_matmul import svm_scores
-from repro.kernels.fused_hog import fused_hog
-
-
-def _to_gray(windows: jax.Array, cfg: HOGConfig) -> jax.Array:
-    gray = grayscale(windows) if windows.shape[-1] == 3 else windows
-    gray = gray.astype(jnp.float32)
-    return gray[..., : cfg.active_h + 2, : cfg.active_w + 2]
-
-
-def _kernel_mode(cfg: HOGConfig) -> str:
-    # the kernels implement the two hardware modes; "ref" maps to sector
-    # (bit-identical bins, see tests/test_kernels_hog.py)
-    return "cordic" if cfg.mode == "cordic" else "sector"
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def hog_descriptor_kernel(windows: jax.Array,
                           cfg: HOGConfig = PAPER_HOG) -> jax.Array:
-    gray = _to_gray(windows, cfg)
-    mode = _kernel_mode(cfg)
-    mag, b = hog_gradient(gray, mode=mode)
-    hist = cell_hist(mag, b, cell=cfg.cell, bins=cfg.bins)
-    blocks = block_norm(hist, block=cfg.block, eps=cfg.eps,
-                        mode=("nr" if mode == "cordic" else "rsqrt"))
-    return blocks.reshape(blocks.shape[0], cfg.n_features)
+    return window_descriptor(windows, cfg, backend="kernel")
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def hog_descriptor_fused(windows: jax.Array,
                          cfg: HOGConfig = PAPER_HOG) -> jax.Array:
-    gray = _to_gray(windows, cfg)
-    return fused_hog(gray, cell=cfg.cell, block=cfg.block, bins=cfg.bins,
-                     eps=cfg.eps, mode=_kernel_mode(cfg))
+    return window_descriptor(windows, cfg, backend="fused")
 
 
 @jax.jit

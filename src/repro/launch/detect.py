@@ -1,17 +1,20 @@
-"""Detection launcher: train (or load) an SVM and run the multi-scale
-detector on synthetic scenes -- the paper's system as a CLI.
+"""Detection launcher: train (or load) an SVM and run the device-resident
+multi-scale detector on synthetic scenes -- the paper's system as a CLI.
 
-Usage: PYTHONPATH=src python -m repro.launch.detect [--scenes 3] [--fast]
+Usage: PYTHONPATH=src python -m repro.launch.detect
+           [--scenes 3] [--fast] [--backend ref|kernel|fused]
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DetectorConfig, detect, train_svm
+from repro.core import DetectorConfig, train_svm
+from repro.core.detector import FrameDetector
 from repro.core.hog import PAPER_HOG, hog_descriptor
 from repro.core.svm import SVMTrainConfig
 from repro.data.synth_pedestrian import (PedestrianDataConfig, make_scene,
@@ -22,6 +25,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenes", type=int, default=2)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default="ref",
+                    choices=["ref", "kernel", "fused"],
+                    help="stage backend for the dense HOG pass")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(0)
@@ -33,11 +39,17 @@ def main(argv=None):
     svm, _ = train_svm(feats, jnp.asarray(y),
                        SVMTrainConfig(steps=2500, neg_weight=6.0))
 
+    detector = FrameDetector(svm, DetectorConfig(score_threshold=0.5,
+                                                 backend=args.backend))
     hits = 0
     for i in range(args.scenes):
         scene, truth = make_scene(rng, 320, 240, n_people=2)
-        dets = detect(scene, svm, DetectorConfig(score_threshold=0.5))
-        print(f"scene {i}: {len(truth)} people, {len(dets)} detections")
+        t0 = time.perf_counter()
+        dets = detector(scene)
+        ms = (time.perf_counter() - t0) * 1e3
+        tag = "compile+run" if i == 0 else "steady"
+        print(f"scene {i}: {len(truth)} people, {len(dets)} detections "
+              f"({ms:.1f} ms {tag})")
         for d in dets[:4]:
             y0, x0, y1, x1 = d["box"]
             print(f"   ({y0:5.0f},{x0:5.0f})-({y1:5.0f},{x1:5.0f}) "

@@ -1,10 +1,16 @@
 """Serving engines.
 
 `DetectionService` -- the paper's co-processor as a batched service:
-requests (RGB windows) are queued, padded to the compiled batch size,
-classified in one TPU step, results returned per request. This is the
-Fig. 6 datapath plus the batching/queueing layer an FPGA front-end
+window requests (RGB windows) are queued, padded to the compiled batch
+size, classified in one TPU step, results returned per request. This is
+the Fig. 6 datapath plus the batching/queueing layer an FPGA front-end
 would implement in NIOS/ARM (the paper's "future development" §VI).
+
+Full-FRAME requests (`submit_frame` / `detect_frames`) route through the
+device-resident multi-scale detector (core/detector.py:FrameDetector):
+pyramid, dense HOG, thresholding, top-k and NMS all run in one compiled
+program per frame-shape bucket, with per-frame latency/box stats -- the
+"camera -> detection block" stream the paper sketches in §VI.
 
 `generate` -- LM serving: prefill + greedy/temperature decode loop with
 the layer-stacked KV cache. Used by examples and the serve benchmarks.
@@ -22,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.detector import DetectorConfig, FrameDetector
 from repro.core.hog import HOGConfig, PAPER_HOG
 from repro.core.pipeline import classify_windows
 from repro.core.svm import SVMParams
@@ -39,22 +46,41 @@ class DetectionRequest:
     future: "queue.Queue"
 
 
+@dataclasses.dataclass
+class FrameRequest:
+    frame: np.ndarray                   # (H, W, 3) uint8 or (H, W) gray
+    future: "queue.Queue"
+
+
 class DetectionService:
-    """Micro-batching co-processor front-end (thread-based)."""
+    """Micro-batching co-processor front-end (thread-based).
+
+    Two request classes share the worker thread:
+      * windows -- classified in padded micro-batches (one jit'd step),
+      * frames  -- full multi-scale detection via the device-resident
+        FrameDetector (one compiled program per frame-shape bucket).
+    """
 
     def __init__(self, svm: SVMParams, batch_size: int = 64,
                  cfg: HOGConfig = PAPER_HOG, path: str = "ref",
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0,
+                 detector: Optional[DetectorConfig] = None):
         self.svm = svm
         self.batch = batch_size
         self.cfg = cfg
         self.path = path
         self.max_wait = max_wait_ms / 1e3
         self.q: "queue.Queue[DetectionRequest]" = queue.Queue()
+        self.frame_q: "queue.Queue[FrameRequest]" = queue.Queue()
+        self._work = threading.Event()
         self._stop = False
         self._fn = jax.jit(partial(classify_windows, cfg=cfg, path=path))
+        self._detector = FrameDetector(
+            svm, detector if detector is not None
+            else DetectorConfig(hog=cfg, backend=path))
         self._thread = threading.Thread(target=self._loop, daemon=True)
-        self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0}
+        self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0,
+                      "frames": 0, "frame_ms": 0.0, "frame_boxes": 0}
 
     def start(self):
         self._thread.start()
@@ -64,9 +90,11 @@ class DetectionService:
         self._stop = True
         self._thread.join(timeout=5)
 
+    # ------------------------------------------------------- window path
     def submit(self, window: np.ndarray) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
         self.q.put(DetectionRequest(window, fut))
+        self._work.set()
         return fut
 
     def detect(self, windows: List[np.ndarray],
@@ -74,34 +102,88 @@ class DetectionService:
         futs = [self.submit(w) for w in windows]
         return [f.get(timeout=timeout) for f in futs]
 
+    # -------------------------------------------------------- frame path
+    def submit_frame(self, frame: np.ndarray) -> "queue.Queue":
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self.frame_q.put(FrameRequest(frame, fut))
+        self._work.set()
+        return fut
+
+    def detect_frames(self, frames: List[np.ndarray],
+                      timeout: float = 120.0) -> List[Dict[str, Any]]:
+        """Full-frame requests: each result is {detections, ms}; a
+        request that raised carries an extra "error" key instead of
+        hanging (the worker survives bad inputs)."""
+        futs = [self.submit_frame(f) for f in frames]
+        return [f.get(timeout=timeout) for f in futs]
+
+    # ------------------------------------------------------------ worker
     def _loop(self):
         while not self._stop:
-            reqs: List[DetectionRequest] = []
+            served = self._serve_frame()
+            served = self._serve_window_batch() or served
+            if not served:
+                # idle: block on the wake event (no busy-poll). Clear
+                # first, then re-check the queues so a submit racing the
+                # clear re-sets the event and the wait returns at once.
+                self._work.clear()
+                if self.q.empty() and self.frame_q.empty():
+                    self._work.wait(timeout=0.1)
+
+    def _serve_frame(self) -> bool:
+        try:
+            req = self.frame_q.get_nowait()
+        except queue.Empty:
+            return False
+        t0 = time.perf_counter()
+        try:
+            dets = self._detector(req.frame)
+        except Exception as e:   # contain: a bad frame must not kill the
+            req.future.put({"detections": [], "ms": 0.0,   # worker thread
+                            "error": f"{type(e).__name__}: {e}"})
+            return True
+        ms = (time.perf_counter() - t0) * 1e3
+        self.stats["frames"] += 1
+        self.stats["frame_boxes"] += len(dets)
+        self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
+            / self.stats["frames"]
+        req.future.put({"detections": dets, "ms": ms})
+        return True
+
+    def _serve_window_batch(self) -> bool:
+        reqs: List[DetectionRequest] = []
+        try:
+            reqs.append(self.q.get_nowait())
+        except queue.Empty:
+            return False
+        t0 = time.time()
+        while (len(reqs) < self.batch
+               and time.time() - t0 < self.max_wait):
             try:
-                reqs.append(self.q.get(timeout=0.1))
+                reqs.append(self.q.get_nowait())
             except queue.Empty:
-                continue
-            t0 = time.time()
-            while (len(reqs) < self.batch
-                   and time.time() - t0 < self.max_wait):
-                try:
-                    reqs.append(self.q.get_nowait())
-                except queue.Empty:
-                    time.sleep(0.0005)
-            n = len(reqs)
-            pad = self.batch - n
+                time.sleep(0.0005)
+        n = len(reqs)
+        pad = self.batch - n
+        try:
             wins = np.stack([r.window for r in reqs]
                             + [np.zeros_like(reqs[0].window)] * pad)
             out = self._fn(self.svm, jnp.asarray(wins))
             score = np.asarray(out["score"])
             human = np.asarray(out["human"])
-            for i, r in enumerate(reqs):
-                r.future.put({"score": float(score[i]),
-                              "human": int(human[i])})
-            self.stats["batches"] += 1
-            self.stats["requests"] += n
-            self.stats["occupancy"] = (self.stats["requests"]
-                                       / (self.stats["batches"] * self.batch))
+        except Exception as e:   # contain: fail the batch, keep serving
+            for r in reqs:
+                r.future.put({"score": float("nan"), "human": -1,
+                              "error": f"{type(e).__name__}: {e}"})
+            return True
+        for i, r in enumerate(reqs):
+            r.future.put({"score": float(score[i]),
+                          "human": int(human[i])})
+        self.stats["batches"] += 1
+        self.stats["requests"] += n
+        self.stats["occupancy"] = (self.stats["requests"]
+                                   / (self.stats["batches"] * self.batch))
+        return True
 
 
 # -------------------------------------------------------------------- LM

@@ -1,0 +1,49 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt). When it is
+not installed the property tests must SKIP, not kill collection, so test
+modules import `given / settings / st` from here instead of from
+`hypothesis` directly.
+
+Without hypothesis, `@given(...)` replaces the test with a zero-argument
+function that calls `pytest.skip` at runtime (zero-arg so pytest does not
+try to resolve the strategy parameters as fixtures), `@settings(...)` is
+a no-op, and `st` is a stub whose strategy constructors return opaque
+placeholders.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """`st.floats(...)`, `st.integers(...)`, ... -> placeholder."""
+
+        def __getattr__(self, name):
+            def _make(*args, **kwargs):
+                return ("<strategy>", name, args, kwargs)
+            return _make
+
+    st = _StrategyStub()
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            _skipped.__module__ = fn.__module__
+            return _skipped
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hog import (HOGConfig, PAPER_HOG, gradients, grayscale,
                             hog_descriptor, mag_bin_cordic, mag_bin_ref,

@@ -1,0 +1,199 @@
+"""Staged-pipeline refactor: dense-vs-windowed equivalence per numerics
+mode and per backend, vectorized NMS vs the greedy host reference, input
+validation, frame-shape-bucket compile caching, full-frame serving."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.detector import (DetectorConfig, FrameDetector, _frame_program,
+                                 _nms, detect, matrix_iou, nms_keep,
+                                 scene_blocks, score_map)
+from repro.core.hog import HOGConfig, PAPER_HOG, hog_descriptor
+from repro.core.pipeline import extract_features
+from repro.core.stages import (dense_blocks, validate_window, window_blocks,
+                               window_descriptor)
+from repro.core.svm import init_svm
+
+RNG = np.random.default_rng(99)
+
+
+def _scene(h=200, w=150):
+    return jnp.asarray(RNG.integers(0, 256, (h, w)).astype(np.float32))
+
+
+# ------------------------------------------- dense vs windowed, per mode
+@pytest.mark.parametrize("mode", ["ref", "cordic", "sector"])
+def test_dense_matches_windowed_per_mode(mode):
+    """score_map(gray)[i, j] == svm_score(hog(window at (8i, 8j))) for
+    every numerics mode -- the window-independence of eq. 5 that makes
+    dense detection exact, now guaranteed by the shared stage chain."""
+    cfg = dataclasses.replace(PAPER_HOG, mode=mode)
+    gray = _scene()
+    w = jnp.asarray(RNG.normal(size=3780).astype(np.float32) * 0.02)
+    b = jnp.float32(0.1)
+    sm = score_map(gray, w, b, cfg)
+    for (i, j) in [(0, 0), (2, 3), (5, 7)]:
+        win = gray[i * 8:i * 8 + 130, j * 8:j * 8 + 66]
+        d = hog_descriptor(win[None], cfg)[0]
+        want = float(d @ w + b)
+        np.testing.assert_allclose(float(sm[i, j]), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------- backends share the stages
+@pytest.mark.parametrize("backend", ["kernel", "fused"])
+def test_dense_path_runs_on_pallas_backends(backend):
+    """The dense layout must run on the Pallas backends too (it could
+    not before the staged-pipeline refactor) and agree with ref."""
+    gray = _scene()
+    ref = dense_blocks(gray, PAPER_HOG, "ref")
+    got = dense_blocks(gray, PAPER_HOG, backend)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_scene_blocks_and_score_map_accept_backend():
+    gray = _scene()
+    w = jnp.asarray(RNG.normal(size=3780).astype(np.float32) * 0.02)
+    b = jnp.float32(0.0)
+    np.testing.assert_allclose(scene_blocks(gray, PAPER_HOG, "kernel"),
+                               scene_blocks(gray, PAPER_HOG, "ref"),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(score_map(gray, w, b, PAPER_HOG, "fused"),
+                               score_map(gray, w, b, PAPER_HOG, "ref"),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_window_layout_backends_agree():
+    win = jnp.asarray(RNG.integers(0, 256, (3, 130, 66, 3)).astype(np.uint8))
+    d_ref = window_descriptor(win, PAPER_HOG, "ref")
+    for backend in ("kernel", "fused"):
+        np.testing.assert_allclose(window_descriptor(win, PAPER_HOG, backend),
+                                   d_ref, rtol=1e-5, atol=1e-5)
+    blocks = window_blocks(win, PAPER_HOG, "ref")
+    assert blocks.shape == (3, 15, 7, 36)
+
+
+# ------------------------------------------------------- input validation
+def test_small_window_raises():
+    small = jnp.zeros((2, 100, 50), jnp.float32)
+    with pytest.raises(ValueError, match="smaller than"):
+        hog_descriptor(small, PAPER_HOG)
+    with pytest.raises(ValueError, match="smaller than"):
+        extract_features(jnp.zeros((2, 129, 66, 3), jnp.uint8), PAPER_HOG)
+    with pytest.raises(ValueError):
+        validate_window(jnp.zeros((130, 65)), PAPER_HOG)
+    # >= geometry still fine (top-left crop)
+    assert hog_descriptor(jnp.zeros((1, 140, 70)), PAPER_HOG).shape == (1, 3780)
+
+
+# ------------------------------------------------------------------- NMS
+def test_vectorized_nms_matches_greedy_on_random_boxes():
+    for trial in range(5):
+        rng = np.random.default_rng(trial)
+        n = int(rng.integers(5, 220))
+        y0 = rng.uniform(0, 300, n)
+        x0 = rng.uniform(0, 300, n)
+        boxes = np.stack([y0, x0, y0 + rng.uniform(8, 80, n),
+                          x0 + rng.uniform(8, 80, n)], -1).astype(np.float32)
+        scores = rng.normal(size=n).astype(np.float32)
+        want = sorted(_nms(boxes, scores, 0.3))
+        order = np.argsort(-scores)
+        mask = np.asarray(nms_keep(jnp.asarray(boxes[order]),
+                                   jnp.asarray(scores[order]), 0.3))
+        got = sorted(order[np.where(mask)[0]].tolist())
+        assert got == want, (trial, got, want)
+
+
+def test_nms_keep_ignores_neg_inf_rows():
+    boxes = jnp.asarray([[0, 0, 10, 10], [100, 100, 110, 110],
+                         [0, 0, 10, 10]], jnp.float32)
+    scores = jnp.asarray([1.0, 0.5, -jnp.inf])
+    keep = np.asarray(nms_keep(boxes, scores, 0.3))
+    assert keep.tolist() == [True, True, False]
+
+
+def test_matrix_iou_values():
+    a = jnp.asarray([[0, 0, 10, 10]], jnp.float32)
+    b = jnp.asarray([[0, 0, 10, 10], [5, 5, 15, 15],
+                     [20, 20, 30, 30]], jnp.float32)
+    iou = np.asarray(matrix_iou(a, b))[0]
+    np.testing.assert_allclose(iou, [1.0, 25 / 175, 0.0], rtol=1e-5)
+
+
+# ----------------------------------------- device-resident detect() path
+def test_detect_no_retrace_across_calls():
+    """Same-shape frames must reuse ONE compiled program (the scale loop
+    and NMS are inside it; only box decode is host-side)."""
+    svm = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+           "b": jnp.float32(0.0)}
+    cfg = DetectorConfig(score_threshold=-10.0, scales=(1.0, 0.8))
+    det = FrameDetector(svm, cfg)
+    f1 = RNG.integers(0, 256, (224, 160, 3)).astype(np.uint8)
+    f2 = RNG.integers(0, 256, (224, 160, 3)).astype(np.uint8)
+    r1, r2 = det(f1), det(f2)
+    assert r1 and r2
+    prog, _, _ = det.program_for(224, 160)
+    assert prog.fn._cache_size() == 1            # one trace, two frames
+    # same bucket -> same cached FrameProgram object
+    prog2, _, _ = det.program_for(224, 160)
+    assert prog2 is prog
+
+
+def test_detect_results_sorted_and_decoded():
+    svm = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+           "b": jnp.float32(0.0)}
+    dets = detect(RNG.integers(0, 256, (224, 160, 3)).astype(np.uint8),
+                  svm, DetectorConfig(score_threshold=-10.0, scales=(1.0,)))
+    assert dets
+    scores = [d["score"] for d in dets]
+    assert scores == sorted(scores, reverse=True)
+    for d in dets:
+        y0, x0, y1, x1 = d["box"]
+        assert 0 <= y0 < y1 <= 224 + 1e-3
+        assert 0 <= x0 < x1 <= 160 + 1e-3
+        assert d["scale"] == 1.0
+
+
+def test_detect_tiny_frame_returns_empty():
+    svm = init_svm(3780)
+    assert detect(np.zeros((64, 64, 3), np.uint8), svm) == []
+
+
+def test_detect_padded_bucket_masks_out_of_frame_boxes():
+    """A frame that needs padding must never report a window that lies
+    outside the true frame."""
+    svm = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+           "b": jnp.float32(0.0)}
+    h, w = 150, 100                       # pads to 160 x 128 (bucket 32)
+    dets = detect(RNG.integers(0, 256, (h, w, 3)).astype(np.uint8),
+                  svm, DetectorConfig(score_threshold=-10.0, scales=(1.0,)))
+    assert dets
+    for d in dets:
+        assert d["box"][2] <= h + 1e-3 and d["box"][3] <= w + 1e-3
+
+
+# -------------------------------------------------------- full-frame serve
+def test_detection_service_full_frames():
+    from repro.serve.engine import DetectionService
+    svm = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+           "b": jnp.float32(0.0)}
+    svc = DetectionService(
+        svm, batch_size=8,
+        detector=DetectorConfig(score_threshold=-10.0, scales=(1.0,))).start()
+    frames = [RNG.integers(0, 256, (224, 160, 3)).astype(np.uint8)
+              for _ in range(3)]
+    res = svc.detect_frames(frames)
+    # window path still works alongside
+    wres = svc.detect([RNG.integers(0, 256, (130, 66, 3)).astype(np.uint8)])
+    svc.stop()
+    assert len(res) == 3
+    for r in res:
+        assert r["detections"] and r["ms"] > 0
+        assert {"box", "score", "scale"} <= set(r["detections"][0])
+    assert svc.stats["frames"] == 3
+    assert svc.stats["frame_ms"] > 0
+    assert wres[0]["human"] in (0, 1)

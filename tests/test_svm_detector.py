@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.svm import (SVMTrainConfig, accuracy_table, hinge_loss,
                             init_svm, predict, svm_score, train_svm)
