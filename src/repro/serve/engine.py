@@ -12,11 +12,21 @@ pyramid, dense HOG, thresholding, top-k and NMS all run in one compiled
 program per frame-shape bucket, with per-frame latency/box stats -- the
 "camera -> detection block" stream the paper sketches in §VI.
 
+Frame requests MICROBATCH: requests whose frames land in the same shape
+bucket coalesce (up to `frame_batch`, waiting at most `max_wait_ms` for
+stragglers) into one batched device step (`FrameDetector.detect_batch`);
+requests for other buckets are set aside and served in arrival order on
+the next rounds. The bounded frame queue is the backpressure valve:
+`submit_frame` raises `ServiceOverloaded` instead of queueing unbounded
+work, and a malformed frame is answered with an error result without
+poisoning the batch it arrived in.
+
 `generate` -- LM serving: prefill + greedy/temperature decode loop with
 the layer-stacked KV cache. Used by examples and the serve benchmarks.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -52,6 +62,11 @@ class FrameRequest:
     future: "queue.Queue"
 
 
+class ServiceOverloaded(RuntimeError):
+    """Raised by submit_frame when the bounded frame queue is full --
+    the caller must shed load or retry later (backpressure)."""
+
+
 class DetectionService:
     """Micro-batching co-processor front-end (thread-based).
 
@@ -64,14 +79,28 @@ class DetectionService:
     def __init__(self, svm: SVMParams, batch_size: int = 64,
                  cfg: HOGConfig = PAPER_HOG, path: str = "ref",
                  max_wait_ms: float = 2.0,
-                 detector: Optional[DetectorConfig] = None):
+                 detector: Optional[DetectorConfig] = None,
+                 frame_batch: int = 8,
+                 max_pending_frames: int = 256):
         self.svm = svm
         self.batch = batch_size
         self.cfg = cfg
         self.path = path
         self.max_wait = max_wait_ms / 1e3
+        self.frame_batch = max(1, frame_batch)
+        self.max_pending_frames = max_pending_frames
         self.q: "queue.Queue[DetectionRequest]" = queue.Queue()
-        self.frame_q: "queue.Queue[FrameRequest]" = queue.Queue()
+        self.frame_q: "queue.Queue[FrameRequest]" = \
+            queue.Queue(maxsize=max_pending_frames)
+        # same-arrival-order parking spot for requests whose shape
+        # bucket did not match the batch being formed
+        self._frame_backlog: "collections.deque[FrameRequest]" = \
+            collections.deque()
+        # accepted-but-unanswered frame requests, wherever they sit
+        # (queue, backlog, or the worker's hands) -- the number the
+        # backpressure valve actually bounds
+        self._pending_frames = 0
+        self._pending_lock = threading.Lock()
         self._work = threading.Event()
         self._stop = False
         self._fn = jax.jit(partial(classify_windows, cfg=cfg, path=path))
@@ -80,7 +109,9 @@ class DetectionService:
             else DetectorConfig(hog=cfg, backend=path))
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0,
-                      "frames": 0, "frame_ms": 0.0, "frame_boxes": 0}
+                      "frames": 0, "frame_ms": 0.0, "frame_boxes": 0,
+                      "frame_batches": 0, "frame_occupancy": 0.0,
+                      "frame_rejects": 0}
 
     def start(self):
         self._thread.start()
@@ -105,49 +136,155 @@ class DetectionService:
     # -------------------------------------------------------- frame path
     def submit_frame(self, frame: np.ndarray) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
-        self.frame_q.put(FrameRequest(frame, fut))
+        # the bound counts every accepted-but-unanswered request --
+        # queued, parked in the bucket backlog, or in the worker's
+        # hands -- so shuffling between holding areas cannot grow total
+        # pending work past max_pending_frames
+        with self._pending_lock:
+            if self._pending_frames >= self.max_pending_frames:
+                self.stats["frame_rejects"] += 1
+                raise ServiceOverloaded(
+                    f"{self.max_pending_frames} frames pending; "
+                    f"shed load or retry")
+            self._pending_frames += 1
+        try:
+            self.frame_q.put_nowait(FrameRequest(frame, fut))
+        except queue.Full:                    # maxsize == the same bound,
+            with self._pending_lock:          # so only a relic race path
+                self._pending_frames -= 1
+            self.stats["frame_rejects"] += 1
+            raise ServiceOverloaded(
+                f"frame queue full ({self.frame_q.maxsize} pending); "
+                f"shed load or retry") from None
         self._work.set()
         return fut
+
+    def _answer_frame(self, req: FrameRequest, payload: Dict) -> None:
+        """Resolve a frame request's future and release its pending
+        slot -- the ONLY way frame futures are answered."""
+        with self._pending_lock:
+            self._pending_frames -= 1
+        req.future.put(payload)
 
     def detect_frames(self, frames: List[np.ndarray],
                       timeout: float = 120.0) -> List[Dict[str, Any]]:
         """Full-frame requests: each result is {detections, ms}; a
-        request that raised carries an extra "error" key instead of
-        hanging (the worker survives bad inputs)."""
-        futs = [self.submit_frame(f) for f in frames]
-        return [f.get(timeout=timeout) for f in futs]
+        request that raised -- or was shed by backpressure -- carries
+        an extra "error" key instead of hanging or aborting the rest
+        of the submission (the worker survives bad inputs). Callers
+        that want the hard ServiceOverloaded signal use submit_frame
+        directly."""
+        futs: List[Any] = []
+        for f in frames:
+            try:
+                futs.append(self.submit_frame(f))
+            except ServiceOverloaded as e:
+                futs.append({"detections": [], "ms": 0.0,
+                             "error": f"ServiceOverloaded: {e}"})
+        return [f if isinstance(f, dict) else f.get(timeout=timeout)
+                for f in futs]
 
     # ------------------------------------------------------------ worker
     def _loop(self):
         while not self._stop:
-            served = self._serve_frame()
+            served = self._serve_frame_batch()
             served = self._serve_window_batch() or served
             if not served:
                 # idle: block on the wake event (no busy-poll). Clear
                 # first, then re-check the queues so a submit racing the
                 # clear re-sets the event and the wait returns at once.
                 self._work.clear()
-                if self.q.empty() and self.frame_q.empty():
+                if self.q.empty() and self.frame_q.empty() \
+                        and not self._frame_backlog:
                     self._work.wait(timeout=0.1)
 
-    def _serve_frame(self) -> bool:
+    def _next_frame_req(self) -> Optional[FrameRequest]:
+        if self._frame_backlog:
+            return self._frame_backlog.popleft()
         try:
-            req = self.frame_q.get_nowait()
+            return self.frame_q.get_nowait()
         except queue.Empty:
+            return None
+
+    def _serve_frame_batch(self) -> bool:
+        """Coalesce same-bucket frame requests into one batched step.
+
+        The first request pins the shape bucket; further requests are
+        drained from the backlog/queue until `frame_batch` frames are
+        gathered or `max_wait` expires. Mismatched buckets park in the
+        backlog (served, in order, on later rounds); malformed frames
+        are answered with an error result immediately and never join
+        the batch.
+        """
+        req = self._next_frame_req()
+        if req is None:
             return False
+        try:
+            bucket = self._detector.bucket_for(req.frame)
+        except Exception as e:
+            self._answer_frame(req, {"detections": [], "ms": 0.0,
+                                     "error": f"{type(e).__name__}: {e}"})
+            return True
+        group: List[FrameRequest] = [req]
+        parked: List[FrameRequest] = []
+        deadline = time.monotonic() + self.max_wait
+        while len(group) < self.frame_batch:
+            nxt = None
+            if self._frame_backlog:
+                nxt = self._frame_backlog.popleft()
+            else:
+                wait = deadline - time.monotonic()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self.frame_q.get(timeout=wait)
+                except queue.Empty:
+                    break
+            try:
+                b = self._detector.bucket_for(nxt.frame)
+            except Exception as e:
+                self._answer_frame(nxt, {"detections": [], "ms": 0.0,
+                                         "error": f"{type(e).__name__}: "
+                                                  f"{e}"})
+                continue
+            if b == bucket:
+                group.append(nxt)
+            else:
+                parked.append(nxt)
+        self._frame_backlog.extend(parked)
+
         t0 = time.perf_counter()
         try:
-            dets = self._detector(req.frame)
-        except Exception as e:   # contain: a bad frame must not kill the
-            req.future.put({"detections": [], "ms": 0.0,   # worker thread
-                            "error": f"{type(e).__name__}: {e}"})
-            return True
-        ms = (time.perf_counter() - t0) * 1e3
-        self.stats["frames"] += 1
-        self.stats["frame_boxes"] += len(dets)
-        self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
-            / self.stats["frames"]
-        req.future.put({"detections": dets, "ms": ms})
+            if len(group) == 1:
+                dets_per = [self._detector(group[0].frame)]
+            else:
+                dets_per = self._detector.detect_batch(
+                    [r.frame for r in group])
+        except Exception:
+            # batch failed as a whole: fall back to per-frame so one
+            # poisonous frame cannot fail its innocent batch-mates
+            dets_per = []
+            for r in group:
+                try:
+                    dets_per.append(self._detector(r.frame))
+                except Exception as e:
+                    dets_per.append(e)
+        ms = (time.perf_counter() - t0) * 1e3 / len(group)
+        self.stats["frame_batches"] += 1
+        for r, dets in zip(group, dets_per):
+            if isinstance(dets, Exception):
+                self._answer_frame(
+                    r, {"detections": [], "ms": 0.0,
+                        "error": f"{type(dets).__name__}: {dets}"})
+                continue
+            self.stats["frames"] += 1
+            self.stats["frame_boxes"] += len(dets)
+            self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
+                / self.stats["frames"]
+            self._answer_frame(r, {"detections": dets, "ms": ms})
+        self.stats["frame_occupancy"] = (
+            self.stats["frames"]
+            / (self.stats["frame_batches"] * self.frame_batch))
         return True
 
     def _serve_window_batch(self) -> bool:
@@ -156,9 +293,9 @@ class DetectionService:
             reqs.append(self.q.get_nowait())
         except queue.Empty:
             return False
-        t0 = time.time()
+        t0 = time.monotonic()
         while (len(reqs) < self.batch
-               and time.time() - t0 < self.max_wait):
+               and time.monotonic() - t0 < self.max_wait):
             try:
                 reqs.append(self.q.get_nowait())
             except queue.Empty:

@@ -1,0 +1,157 @@
+"""Golden-reference regression tests.
+
+The seed suite cross-validated backends against EACH OTHER, which lets
+all of them drift together silently. This module pins the numerics to
+fixtures checked into the repo (tests/golden/hog_golden.npz): HOG
+descriptors + SVM scores for three fixed-seed windows, computed by the
+INDEPENDENT pure-numpy reference below (float64, no jax anywhere in the
+reference path).
+
+Two layers of protection:
+  * the numpy reference must reproduce the committed fixtures almost
+    bit-exactly -- catches accidental fixture or reference edits;
+  * every stage backend (ref | kernel | fused) must reproduce the
+    fixtures within its per-backend tolerance -- catches numerics drift
+    in the jax/Pallas pipeline, which the backend-vs-backend tests
+    cannot see.
+
+Regenerate (only when the numerics are INTENTIONALLY changed -- say so
+in the PR):  PYTHONPATH=src python tests/test_golden_reference.py --regen
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.hog import PAPER_HOG
+from repro.core.pipeline import classify_windows
+from repro.core.stages import window_descriptor
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "hog_golden.npz"
+SEEDS = (0, 1, 2)
+
+# per-backend absolute tolerance on descriptor elements (all in [-1, 1])
+# and on the SVM score. ref is the float32 twin of the float64 reference;
+# the Pallas backends accumulate in different orders.
+TOL = {"ref": 2e-5, "kernel": 5e-5, "fused": 5e-5}
+
+
+# --------------------------------------------------- pure-numpy reference
+
+def numpy_hog_descriptor(window_rgb: np.ndarray) -> np.ndarray:
+    """The paper's HOG chain in plain float64 numpy: BT.601 grayscale,
+    central differences, arctan2 hard binning (9 unsigned bins), 8x8
+    cell histograms, 2x2-block L2 norm (eps=1e-2). Mirrors the `ref`
+    mode contract of core/hog.py without importing any of it."""
+    g = (0.2989 * window_rgb[..., 0].astype(np.float64)
+         + 0.5870 * window_rgb[..., 1]
+         + 0.1140 * window_rgb[..., 2])
+    g = g[:130, :66]
+    fx = g[1:-1, 2:] - g[1:-1, :-2]
+    fy = g[2:, 1:-1] - g[:-2, 1:-1]
+    mag = np.sqrt(fx * fx + fy * fy)
+    theta = np.mod(np.degrees(np.arctan2(fy, fx)), 180.0)
+    b = np.clip(np.floor(theta / 20.0), 0, 8).astype(np.int64)
+
+    hist = np.zeros((16, 8, 9))
+    for ci in range(16):
+        for cj in range(8):
+            cm = mag[ci * 8:(ci + 1) * 8, cj * 8:(cj + 1) * 8]
+            cb = b[ci * 8:(ci + 1) * 8, cj * 8:(cj + 1) * 8]
+            for k in range(9):
+                hist[ci, cj, k] = cm[cb == k].sum()
+
+    desc = np.zeros((15, 7, 36))
+    for bi in range(15):
+        for bj in range(7):
+            # cell order must match hog.block_normalize: (0,0) (0,1)
+            # (1,0) (1,1), 9 bins each
+            v = np.concatenate([hist[bi + i, bj + j]
+                                for i in range(2) for j in range(2)])
+            desc[bi, bj] = v / np.sqrt(np.sum(v * v) + 1e-2 ** 2)
+    return desc.reshape(-1)
+
+
+def _fixture_inputs():
+    windows = np.stack([
+        np.random.default_rng(s).integers(0, 256, (130, 66, 3))
+        .astype(np.uint8) for s in SEEDS])
+    wrng = np.random.default_rng(1234)
+    w = (wrng.normal(size=3780) * 0.02).astype(np.float64)
+    b = 0.125
+    return windows, w, b
+
+
+def _generate():
+    windows, w, b = _fixture_inputs()
+    desc = np.stack([numpy_hog_descriptor(win) for win in windows])
+    scores = desc @ w + b
+    GOLDEN.parent.mkdir(exist_ok=True)
+    np.savez_compressed(
+        GOLDEN, windows=windows, descriptors=desc.astype(np.float32),
+        svm_w=w.astype(np.float32), svm_b=np.float32(b),
+        scores=scores.astype(np.float32))
+    return desc, scores
+
+
+# ------------------------------------------------------------------ tests
+
+@pytest.fixture(scope="module")
+def golden():
+    assert GOLDEN.exists(), f"missing fixture {GOLDEN}; run --regen"
+    return dict(np.load(GOLDEN))
+
+
+def test_fixture_inputs_are_reproducible(golden):
+    """The committed windows/weights come from the fixed seeds."""
+    windows, w, b = _fixture_inputs()
+    np.testing.assert_array_equal(golden["windows"], windows)
+    np.testing.assert_allclose(golden["svm_w"], w, atol=1e-7)
+    np.testing.assert_allclose(golden["svm_b"], b, atol=1e-7)
+
+
+def test_numpy_reference_matches_fixture(golden):
+    """The float64 reference regenerates the committed descriptors and
+    scores -- the fixture and the reference pin each other."""
+    desc = np.stack([numpy_hog_descriptor(w) for w in golden["windows"]])
+    np.testing.assert_allclose(desc, golden["descriptors"],
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(
+        desc @ golden["svm_w"].astype(np.float64) + float(golden["svm_b"]),
+        golden["scores"], rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "kernel", "fused"])
+def test_backend_reproduces_golden_descriptors(golden, backend):
+    got = np.asarray(window_descriptor(jnp.asarray(golden["windows"]),
+                                       PAPER_HOG, backend))
+    np.testing.assert_allclose(got, golden["descriptors"],
+                               rtol=0, atol=TOL[backend],
+                               err_msg=f"{backend} descriptor drifted "
+                                       f"from the golden reference")
+
+
+@pytest.mark.parametrize("backend", ["ref", "kernel", "fused"])
+def test_backend_reproduces_golden_scores(golden, backend):
+    svm = {"w": jnp.asarray(golden["svm_w"]),
+           "b": jnp.asarray(golden["svm_b"])}
+    out = classify_windows(svm, jnp.asarray(golden["windows"]),
+                           PAPER_HOG, backend)
+    np.testing.assert_allclose(np.asarray(out["score"]), golden["scores"],
+                               rtol=0, atol=5e-4,
+                               err_msg=f"{backend} SVM score drifted "
+                                       f"from the golden reference")
+    assert np.asarray(out["human"]).tolist() == \
+        (golden["scores"] > 0).astype(int).tolist()
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        desc, scores = _generate()
+        print(f"wrote {GOLDEN} (descriptors {desc.shape}, "
+              f"scores {np.round(scores, 4)})")
+    else:
+        print(__doc__)

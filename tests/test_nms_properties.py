@@ -1,0 +1,148 @@
+"""Property-based tests for the device NMS primitives.
+
+`matrix_iou` / `nms_keep` (core/detector.py) are the device-side
+selection stage every detection result flows through; these tests state
+their INVARIANTS rather than example outputs:
+
+  * IoU is symmetric, lands in [0, 1], and is 1 on the diagonal;
+  * no two boxes kept by NMS overlap above the suppression threshold;
+  * the kept set is invariant under any permutation of the input boxes
+    (scores ride along, ties excluded) -- NMS depends on the score
+    ORDER, not the storage order;
+  * the device `nms_keep` keeps exactly the host greedy `_nms` set.
+
+Each invariant runs twice: a hypothesis-driven version (via the
+optional-dependency shim -- skips when hypothesis is absent) and a
+seeded multi-trial version that always runs, so CI without hypothesis
+still exercises every property.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.detector import _nms, matrix_iou, nms_keep
+from repro.core.video import iou_np
+
+IOU_THR = 0.3
+
+
+def _random_boxes(rng: np.random.Generator, n: int):
+    """n boxes with positive area and UNIQUE scores (ties would make
+    the permutation property ill-defined)."""
+    y0 = rng.uniform(0, 200, n)
+    x0 = rng.uniform(0, 200, n)
+    boxes = np.stack([y0, x0, y0 + rng.uniform(4, 90, n),
+                      x0 + rng.uniform(4, 90, n)], -1).astype(np.float32)
+    scores = rng.permutation(n).astype(np.float32) + \
+        rng.uniform(0.0, 0.5, n).astype(np.float32)
+    return boxes, scores
+
+
+def _kept_rows(boxes: np.ndarray, scores: np.ndarray,
+               thr: float = IOU_THR) -> frozenset:
+    """Device-NMS keep set as row identities of the ORIGINAL array."""
+    order = np.argsort(-scores)
+    mask = np.asarray(nms_keep(jnp.asarray(boxes[order]),
+                               jnp.asarray(scores[order]), thr))
+    return frozenset(order[np.where(mask)[0]].tolist())
+
+
+# ------------------------------------------------------------ invariants
+
+def check_iou_properties(boxes: np.ndarray):
+    a = jnp.asarray(boxes)
+    iou = np.asarray(matrix_iou(a, a))
+    assert np.all(iou >= 0.0) and np.all(iou <= 1.0 + 1e-6)
+    np.testing.assert_allclose(iou, iou.T, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.diag(iou), 1.0, atol=1e-5)
+    # the host twin used by the tracker agrees with the device op
+    np.testing.assert_allclose(iou_np(boxes, boxes), iou,
+                               rtol=1e-4, atol=1e-5)
+
+
+def check_no_kept_overlap(boxes: np.ndarray, scores: np.ndarray):
+    kept = sorted(_kept_rows(boxes, scores))
+    iou = iou_np(boxes[kept], boxes[kept])
+    np.fill_diagonal(iou, 0.0)
+    assert np.all(iou <= IOU_THR + 1e-5), \
+        f"kept boxes {kept} overlap above {IOU_THR}"
+
+
+def check_permutation_invariant(boxes: np.ndarray, scores: np.ndarray,
+                                perm: np.ndarray):
+    base = _kept_rows(boxes, scores)
+    permuted = _kept_rows(boxes[perm], scores[perm])
+    assert {int(perm[i]) for i in permuted} == set(base)
+
+
+def check_host_device_equivalence(boxes: np.ndarray, scores: np.ndarray):
+    assert _kept_rows(boxes, scores) == frozenset(_nms(boxes, scores,
+                                                       IOU_THR))
+
+
+# ----------------------------------------- seeded versions (always run)
+
+@pytest.mark.parametrize("seed", range(8))
+def test_iou_properties_seeded(seed):
+    rng = np.random.default_rng(seed)
+    boxes, _ = _random_boxes(rng, int(rng.integers(1, 120)))
+    check_iou_properties(boxes)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_nms_no_kept_overlap_seeded(seed):
+    rng = np.random.default_rng(100 + seed)
+    boxes, scores = _random_boxes(rng, int(rng.integers(1, 150)))
+    check_no_kept_overlap(boxes, scores)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_nms_permutation_invariant_seeded(seed):
+    rng = np.random.default_rng(200 + seed)
+    boxes, scores = _random_boxes(rng, int(rng.integers(2, 120)))
+    check_permutation_invariant(boxes, scores,
+                                rng.permutation(len(boxes)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_nms_host_device_equivalence_seeded(seed):
+    rng = np.random.default_rng(300 + seed)
+    boxes, scores = _random_boxes(rng, int(rng.integers(1, 150)))
+    check_host_device_equivalence(boxes, scores)
+
+
+# ------------------------------------ hypothesis versions (skip-if-absent)
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=120),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_iou_properties_hypothesis(n, seed):
+    boxes, _ = _random_boxes(np.random.default_rng(seed), n)
+    check_iou_properties(boxes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=150),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_nms_no_kept_overlap_hypothesis(n, seed):
+    boxes, scores = _random_boxes(np.random.default_rng(seed), n)
+    check_no_kept_overlap(boxes, scores)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=2, max_value=120),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_nms_permutation_invariant_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    boxes, scores = _random_boxes(rng, n)
+    check_permutation_invariant(boxes, scores, rng.permutation(n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=150),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_nms_host_device_equivalence_hypothesis(n, seed):
+    boxes, scores = _random_boxes(np.random.default_rng(seed), n)
+    check_host_device_equivalence(boxes, scores)

@@ -1,0 +1,126 @@
+"""Concurrency stress for DetectionService.
+
+N client threads hammer the one worker thread with a mix of window
+requests, single-frame requests, and multi-frame (batched) requests --
+plus malformed frames -- concurrently. Every request must complete,
+frame results must match the serial FrameDetector exactly, and a
+malformed request must be answered with an error without wedging the
+microbatcher for its neighbors.
+
+Marked `slow`: runs in the separate stress CI lane, not tier-1
+(`-m "not slow"`).
+"""
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.detector import DetectorConfig, FrameDetector
+from repro.serve.engine import DetectionService, ServiceOverloaded
+
+RNG = np.random.default_rng(21)
+SVM = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+       "b": jnp.float32(0.0)}
+DET_CFG = DetectorConfig(score_threshold=-10.0, scales=(1.0,))
+
+N_THREADS = 6
+
+
+@pytest.mark.slow
+def test_concurrent_mixed_requests_match_serial():
+    frames_a = [RNG.integers(0, 256, (160, 128, 3)).astype(np.uint8)
+                for _ in range(N_THREADS)]
+    frames_b = [RNG.integers(0, 256, (224, 192, 3)).astype(np.uint8)
+                for _ in range(N_THREADS)]
+    windows = [RNG.integers(0, 256, (130, 66, 3)).astype(np.uint8)
+               for _ in range(N_THREADS)]
+    bad = np.zeros((7,), np.uint8)                  # malformed frame
+
+    serial = FrameDetector(SVM, DET_CFG)
+    want_a = [serial(f) for f in frames_a]
+    want_b = [serial(f) for f in frames_b]
+
+    svc = DetectionService(SVM, batch_size=8, max_wait_ms=10.0,
+                           detector=DET_CFG).start()
+    results = [None] * N_THREADS
+    errors = []
+
+    def client(i):
+        try:
+            out = {}
+            # batched request: both buckets interleaved + a malformed one
+            out["frames"] = svc.detect_frames(
+                [frames_a[i], bad, frames_b[i]])
+            out["window"] = svc.detect([windows[i]])[0]
+            out["single"] = svc.submit_frame(frames_a[i]).get(timeout=60)
+            results[i] = out
+        except Exception as e:                      # pragma: no cover
+            errors.append((i, repr(e)))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads), "a client hung"
+    assert not errors, errors
+
+    def boxes(dets):
+        return [(d["box"], round(d["score"], 4)) for d in dets]
+
+    for i, out in enumerate(results):
+        assert out is not None, f"client {i} never finished"
+        ra, rbad, rb = out["frames"]
+        assert "error" not in ra and "error" not in rb
+        assert "error" in rbad and rbad["detections"] == []
+        assert boxes(ra["detections"]) == boxes(want_a[i])
+        assert boxes(rb["detections"]) == boxes(want_b[i])
+        assert boxes(out["single"]["detections"]) == boxes(want_a[i])
+        assert out["window"]["human"] in (0, 1)
+
+    # the microbatcher actually batched: fewer device steps than frames
+    assert svc.stats["frame_batches"] < svc.stats["frames"]
+    # 2 good batched frames + 1 single per client; malformed never counts
+    assert svc.stats["frames"] == 3 * N_THREADS
+    svc.stop()
+
+
+@pytest.mark.slow
+def test_backpressure_rejects_but_recovers():
+    svc = DetectionService(SVM, detector=DET_CFG, max_pending_frames=2)
+    f = RNG.integers(0, 256, (160, 128, 3)).astype(np.uint8)
+    futs = [svc.submit_frame(f), svc.submit_frame(f)]   # fills the queue
+    with pytest.raises(ServiceOverloaded):
+        svc.submit_frame(f)
+    assert svc.stats["frame_rejects"] == 1
+    svc.start()                                     # worker drains the queue
+    for fut in futs:
+        assert "error" not in fut.get(timeout=60)
+    # capacity is back
+    assert "error" not in svc.submit_frame(f).get(timeout=60)
+    svc.stop()
+
+
+@pytest.mark.slow
+def test_malformed_flood_does_not_wedge_worker():
+    """A burst of garbage shapes interleaved with good frames: every
+    request answered, good ones correct."""
+    svc = DetectionService(SVM, batch_size=8, max_wait_ms=5.0,
+                           detector=DET_CFG).start()
+    good = RNG.integers(0, 256, (160, 128, 3)).astype(np.uint8)
+    want = FrameDetector(SVM, DET_CFG)(good)
+    reqs = []
+    for i in range(12):
+        reqs.append(svc.submit_frame(
+            good if i % 3 == 0 else np.zeros((i + 1,), np.uint8)))
+    for i, fut in enumerate(reqs):
+        res = fut.get(timeout=60)
+        if i % 3 == 0:
+            assert "error" not in res
+            assert [d["box"] for d in res["detections"]] == \
+                [d["box"] for d in want]
+        else:
+            assert "error" in res
+    svc.stop()
