@@ -1,14 +1,18 @@
-"""Full-frame detection as a SERVICE: a camera-style stream of frames
-through DetectionService.submit_frame -- pyramid, dense HOG, top-k and
-NMS all device-resident, one compiled program per frame-shape bucket
-(core/detector.py). The first frame pays compilation; every later frame
-of the same shape reuses the program. Same-shape requests coalesce into
-one batched device step (detect_batch microbatching).
+"""Full-frame detection as a SERVICE and as a tracked STREAM, all from
+one `repro.api.DetectionSession`.
 
-A second phase runs a synthetic video CLIP (constant-velocity
-pedestrians, data/synth_pedestrian.py:make_clip) through the batched
-path + IoU tracker (core/video.py:VideoDetector) and reports
-throughput and track-id stability.
+Phase 1 -- service: `session.serve()` starts the micro-batching
+DetectionService on the session's own compiled programs (pyramid, dense
+HOG, top-k and NMS device-resident, one program per frame-shape
+bucket). The first frame pays compilation; same-shape requests coalesce
+into one batched device step. Results carry per-frame latency and the
+top-k `saturated` flag.
+
+Phase 2 -- stream: a synthetic video clip (constant-velocity
+pedestrians) through `session.stream` -- the batched device path + IoU
+tracker -- after an explicit `session.warmup` of every (batch, shape)
+the clip will hit, so the timed region measures steady-state
+throughput. Reports track-id stability.
 
 Usage: PYTHONPATH=src python examples/detect_frames.py [--frames 8]
                                                        [--clip-frames 12]
@@ -16,16 +20,13 @@ Usage: PYTHONPATH=src python examples/detect_frames.py [--frames 8]
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DetectionSession, PipelineConfig
 from repro.core.detector import DetectorConfig
-from repro.core.hog import PAPER_HOG, hog_descriptor
-from repro.core.svm import SVMTrainConfig, train_svm
-from repro.core.video import TrackerConfig, VideoDetector
-from repro.data.synth_pedestrian import (ClipConfig, PedestrianDataConfig,
-                                         make_clip, make_scene, make_windows)
-from repro.serve.engine import DetectionService
+from repro.core.svm import SVMTrainConfig
+from repro.core.video import TrackerConfig
+from repro.data.synth_pedestrian import ClipConfig, make_clip, make_scene
 
 
 def main():
@@ -35,14 +36,13 @@ def main():
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    print("training a quick SVM ...")
-    x, y = make_windows(500, 350, PedestrianDataConfig(), rng)
-    f = hog_descriptor(jnp.asarray(x), PAPER_HOG)
-    svm, _ = train_svm(f, jnp.asarray(y),
-                       SVMTrainConfig(steps=1500, neg_weight=6.0))
+    print("training a quick SVM (DetectionSession.train) ...")
+    cfg = PipelineConfig(
+        detector=DetectorConfig(score_threshold=0.5),
+        train=SVMTrainConfig(steps=1500, neg_weight=6.0))
+    session = DetectionSession.train(cfg, n_pos=500, n_neg=350)
 
-    service = DetectionService(
-        svm, detector=DetectorConfig(score_threshold=0.5)).start()
+    service = session.serve().start()
 
     print(f"streaming {args.frames} 320x240 frames ...")
     frames, truths = [], []
@@ -62,6 +62,7 @@ def main():
                         and abs(d["box"][1] - tx) < 32
                         for d in r["detections"])
     per_frame = [r["ms"] for r in results]
+    n_sat = sum(bool(r.get("saturated")) for r in results)
     print(f"wall            {wall:.2f}s for {args.frames} frames")
     print(f"frame latency   first={per_frame[0]:.0f} ms (compile), "
           f"steady={np.mean(per_frame[1:]):.0f} ms")
@@ -69,32 +70,33 @@ def main():
           f"batches={service.stats['frame_batches']} "
           f"occupancy={service.stats['frame_occupancy']:.2f} "
           f"mean_ms={service.stats['frame_ms']:.0f} "
-          f"boxes={service.stats['frame_boxes']}")
+          f"boxes={service.stats['frame_boxes']} "
+          f"saturated={n_sat}")
     print(f"recall          {hits}/{2 * args.frames}")
     service.stop()
 
     # ---- phase 2: batched clip + tracking -------------------------------
-    print(f"\nvideo clip: {args.clip_frames} frames, 2 walkers, batched "
-          f"path + tracker ...")
+    print(f"\nvideo clip: {args.clip_frames} frames, 2 walkers, "
+          f"session.stream (batched path + tracker) ...")
     clip, truth = make_clip(rng, ClipConfig(n_frames=args.clip_frames,
                                             h=240, w=320, n_people=2))
     # the quick SVM fires broadly at threshold 0.5; 512 top-k slots keep
-    # the candidate tail out of the max_detections RuntimeWarning
-    video = VideoDetector(svm, DetectorConfig(score_threshold=0.5,
-                                              max_detections=512),
-                          TrackerConfig(min_hits=2, max_misses=3))
+    # the candidate tail out of the saturation path
+    video = DetectionSession(session.svm, PipelineConfig(
+        detector=DetectorConfig(score_threshold=0.5, max_detections=512),
+        tracker=TrackerConfig(min_hits=2, max_misses=3)))
     # compile EVERY (bucket, B) the clip will hit -- full chunks and the
     # tail -- so the timed region measures steady-state throughput
-    warm_sizes = {min(8, len(clip))}
-    if len(clip) % 8:
-        warm_sizes.add(len(clip) % 8)
-    for s in warm_sizes:
-        if s > 1:                  # process_clip serves 1-frame chunks
-            video.detector.detect_batch(list(clip[:s]))
-        else:                      # through the single-frame program
-            video.detector(clip[0])
+    h, w = clip.shape[1], clip.shape[2]
+    warm = []
+    head = min(8, len(clip))
+    warm.append((head, h, w) if head > 1 else (h, w))
+    tail = len(clip) % 8
+    if tail:
+        warm.append((tail, h, w) if tail > 1 else (h, w))
+    video.warmup(warm)
     t0 = time.time()
-    tracked = video.process_clip(list(clip), batch_size=8)
+    tracked = [d.to_list() for d in video.stream(list(clip), batch_size=8)]
     wall = time.time() - t0
 
     track_hits, id_sets = 0, {}

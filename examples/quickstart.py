@@ -4,8 +4,18 @@
 2. extract HOG descriptors (130x66 -> 3780 features, eqs. 1-5),
 3. train the linear SVM in-framework (replacing the paper's Matlab step),
 4. evaluate Table I accuracy,
-5. run the multi-scale sliding-window detector on a scene
-   (the paper's "future development" §VI).
+5. run the multi-scale sliding-window detector on a scene through the
+   unified api (`repro.api.DetectionSession` -- the paper's one-command
+   co-processor interface; "future development" §VI).
+
+The same session serves every other path too:
+
+    session.detect_batch(frames)    # stacked frames, one device step
+    session.stream(clip)            # batched detection + IoU tracking
+    session.serve().start()         # micro-batching DetectionService
+
+and `presets("paper" | "faithful" | "perf")` swaps the whole numerics /
+precision / serving tree in one argument (see DESIGN.md §8).
 
 Usage:  PYTHONPATH=src python examples/quickstart.py [--fast]
 """
@@ -15,7 +25,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DetectorConfig, PAPER_HOG, accuracy_table, detect,
+from repro.api import DetectionSession, PipelineConfig
+from repro.core import (DetectorConfig, PAPER_HOG, accuracy_table,
                         hog_descriptor, train_svm)
 from repro.core.svm import SVMTrainConfig
 from repro.data.synth_pedestrian import (PedestrianDataConfig, make_dataset,
@@ -53,10 +64,14 @@ def main():
     print(f"      total          {acc['total_acc']*100:.2f}%  "
           f"(paper 84.35%)")
 
-    print("[5/5] multi-scale detection on a 320x240 scene ...")
+    print("[5/5] multi-scale detection on a 320x240 scene "
+          "(DetectionSession) ...")
+    session = DetectionSession(params, PipelineConfig(
+        detector=DetectorConfig(score_threshold=0.5)))
     rng = np.random.default_rng(7)
     scene, true_boxes = make_scene(rng, 320, 240, n_people=2)
-    dets = detect(scene, params, DetectorConfig(score_threshold=0.5))
+    result = session.detect(scene)           # typed, device-resident
+    dets = result.to_list()                  # legacy dict contract
     print(f"      true boxes: {true_boxes}")
     for d in dets[:5]:
         y0, x0, y1, x1 = d["box"]
@@ -64,6 +79,8 @@ def main():
               f"score={d['score']:.2f} scale={d['scale']}")
     if not dets:
         print("      (no detections above threshold)")
+    if result.saturated:
+        print("      (top-k saturated: raise detector.max_detections)")
 
 
 if __name__ == "__main__":

@@ -2,34 +2,35 @@
 jit'd detection step -- the deployment shape the paper sketches in §VI
 (camera -> ARM core -> detection block).
 
-Trains a quick SVM, starts the DetectionService, submits 500 async
-requests, reports latency percentiles + batch occupancy.
+Trains a quick SVM through `repro.api.DetectionSession`, starts the
+service with `session.serve()` (one PipelineConfig carries the window
+batch + wait deadline), submits 500 async requests, reports latency
+percentiles + batch occupancy.
 
 Usage: PYTHONPATH=src python examples/serve_detector.py
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hog import hog_descriptor, PAPER_HOG
-from repro.core.svm import SVMTrainConfig, train_svm
+from repro.api import DetectionSession, PipelineConfig, ServiceConfig
+from repro.core.svm import SVMTrainConfig
 from repro.data.synth_pedestrian import PedestrianDataConfig, make_windows
-from repro.serve.engine import DetectionService
 
 
 def main():
-    rng = np.random.default_rng(0)
     dcfg = PedestrianDataConfig()
     print("training a quick SVM ...")
-    x, y = make_windows(600, 400, dcfg, rng)
-    f = hog_descriptor(jnp.asarray(x), PAPER_HOG)
-    svm, _ = train_svm(f, jnp.asarray(y),
-                       SVMTrainConfig(steps=1500, neg_weight=6.0))
+    cfg = PipelineConfig(
+        train=SVMTrainConfig(steps=1500, neg_weight=6.0),
+        service=ServiceConfig(window_batch=64, max_wait_ms=4.0))
+    session = DetectionSession.train(cfg, n_pos=600, n_neg=400,
+                                     data_cfg=dcfg)
 
-    service = DetectionService(svm, batch_size=64, max_wait_ms=4.0).start()
+    service = session.serve().start()
     print("submitting 500 requests ...")
-    x_req, y_req = make_windows(250, 250, dcfg, rng)
+    # a fresh stream so requests are not the training windows
+    x_req, y_req = make_windows(250, 250, dcfg, np.random.default_rng(1))
     lat = []
     correct = 0
     t_all = time.time()

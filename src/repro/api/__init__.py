@@ -1,0 +1,7 @@
+# The unified detection API: one config tree, one typed result, one
+# session facade over the image / batch / video / service paths.
+# (DESIGN.md §8; the paper's one-command co-processor interface, §VI.)
+from repro.api.config import (PipelineConfig, ServiceConfig, presets,
+                              register_preset)
+from repro.api.results import Detections
+from repro.api.session import DetectionSession

@@ -1,0 +1,153 @@
+"""The unified configuration tree of the detection API.
+
+Before this layer every host-facing entry point carried its own config
+surface (`DetectorConfig`, `HOGConfig`, `TrackerConfig`,
+`SVMTrainConfig`, plus loose `DetectionService` kwargs), so composing a
+deployment meant threading four dataclasses through five call sites.
+`PipelineConfig` is the one tree the session facade (api/session.py)
+consumes: it nests all of them plus the serving knobs, keeps the HOG
+geometry single-sourced (`detector.hog` always equals `hog`), and
+round-trips through plain JSON so a deployment's exact configuration
+can be checked in, diffed, and shipped to a service.
+
+Presets fold in the paper-workload variants from configs/hog_svm.py:
+
+    presets("paper")      sector-compare binning (TPU-native default)
+    presets("faithful")   CORDIC magnitude/angle + NR rsqrt datapath
+    presets("perf")       bf16 descriptors, fused Pallas dense backend
+    presets("default")    the plain DetectorConfig defaults
+
+`presets()` lists the registered names; `register_preset` adds
+deployment-local ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.detector import DetectorConfig
+from repro.core.hog import HOGConfig, PAPER_HOG
+from repro.core.svm import SVMTrainConfig
+from repro.core.video import TrackerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the DetectionService front-end (serve/engine.py)."""
+
+    window_batch: int = 64        # padded micro-batch of the window path
+    max_wait_ms: float = 2.0      # straggler deadline when coalescing
+    frame_batch: int = 8          # frames per batched detection step
+    max_pending_frames: int = 256  # backpressure bound (ServiceOverloaded)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Everything one detection deployment needs, as one pytree.
+
+    `hog` is the single source of truth for the window geometry and
+    numerics mode: `detector.hog` is forced to match it at construction
+    (passing a non-default `detector.hog` with a default `hog` promotes
+    the detector's -- whichever was explicitly set wins).
+    """
+
+    name: str = "default"
+    hog: HOGConfig = PAPER_HOG
+    detector: DetectorConfig = DetectorConfig()
+    tracker: TrackerConfig = TrackerConfig()
+    train: SVMTrainConfig = SVMTrainConfig()
+    service: ServiceConfig = ServiceConfig()
+
+    def __post_init__(self):
+        if self.detector.hog != self.hog:
+            if self.hog == PAPER_HOG:
+                object.__setattr__(self, "hog", self.detector.hog)
+            else:
+                object.__setattr__(
+                    self, "detector",
+                    dataclasses.replace(self.detector, hog=self.hog))
+
+    # -------------------------------------------------- JSON round trip
+    def to_dict(self) -> Dict[str, Any]:
+        """Nested plain-python dict (json.dumps-able as is)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PipelineConfig":
+        """Inverse of to_dict; accepts JSON-decoded dicts (lists become
+        the tuples the dataclasses expect). `from_dict(to_dict(p)) == p`."""
+        return _build(cls, d)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PipelineConfig":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **kw) -> "PipelineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _build(cls, d: Dict[str, Any]):
+    """Reconstruct a (nested) config dataclass from a plain dict. Field
+    types are taken from the class defaults -- every field of the config
+    tree has an instance default, so no annotation parsing is needed."""
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        if dataclasses.is_dataclass(f.default) and isinstance(v, dict):
+            v = _build(type(f.default), v)
+        elif isinstance(v, list):        # JSON has no tuples
+            v = tuple(v)
+        kwargs[f.name] = v
+    return cls(**kwargs)
+
+
+# ------------------------------------------------------- preset registry
+
+_PRESETS: Dict[str, PipelineConfig] = {}
+
+
+def register_preset(name: str, cfg: PipelineConfig) -> PipelineConfig:
+    _PRESETS[name] = cfg
+    return cfg
+
+
+def presets(name: Optional[str] = None):
+    """presets() -> registered names; presets(name) -> PipelineConfig."""
+    if name is None:
+        return tuple(sorted(_PRESETS))
+    try:
+        return _PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown preset {name!r}; registered: "
+            f"{', '.join(sorted(_PRESETS))}") from None
+
+
+def _register_builtin() -> None:
+    # deferred import: configs/hog_svm pulls in the synthetic-data module
+    from repro.configs import hog_svm
+
+    register_preset("default", PipelineConfig())
+    register_preset("paper", PipelineConfig(
+        name="paper", hog=hog_svm.CONFIG,
+        detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5),
+        train=hog_svm.TRAIN))
+    register_preset("faithful", PipelineConfig(
+        name="faithful", hog=hog_svm.FAITHFUL,
+        detector=DetectorConfig(hog=hog_svm.FAITHFUL, score_threshold=0.5),
+        train=hog_svm.TRAIN))
+    register_preset("perf", PipelineConfig(
+        name="perf", hog=hog_svm.PERF,
+        detector=DetectorConfig(hog=hog_svm.PERF, score_threshold=0.5,
+                                backend="fused", batch_chunk=8),
+        train=hog_svm.TRAIN))
+
+
+_register_builtin()

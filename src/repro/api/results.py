@@ -1,0 +1,232 @@
+"""Typed detection results -- device-resident until the host asks.
+
+The legacy entry points each returned ad-hoc lists of dicts, decoded
+eagerly on every call (one host sync per frame even when the caller only
+wanted a count or wanted to stack results). `Detections` is the one
+result type of the api layer:
+
+  * holds the RAW device outputs of the compiled detection program --
+    top-k `scores`, box-table `index`, NMS `keep` mask, and the
+    threshold-candidate count `n_valid` -- plus the program's static
+    host-side decode tables (pure geometry, numpy),
+  * is a registered jax pytree, so batched results ride through
+    jit/vmap/scan untouched,
+  * decodes LAZILY: nothing syncs to host until `.to_list()` /
+    `.boxes` / `len()` is called, and the decode is cached,
+  * `.to_list()` reproduces the legacy dict contract byte for byte
+    (`{"box": (y0, x0, y1, x1), "score", "scale"}`, descending score),
+  * `.saturated` answers programmatically what used to be only a
+    RuntimeWarning: did more candidates clear the threshold than the
+    program's top-k could hold? (per-frame bool array on batches),
+  * a leading batch axis makes a batch-of-frames result: `d.frame(i)`
+    slices one frame out, `Detections.stack([...])` goes the other way,
+  * `Detections.from_list(dicts)` wraps already-host results (the
+    tracking path) so `stream()` returns the same type; extra keys such
+    as `track_id` pass through `.to_list()` unchanged (they do not
+    survive pytree flattening, which keeps only the device arrays).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.detector import DecodeTables
+
+
+class Detections:
+    """Results of one detection call: a single frame (1-D top-k axis) or
+    a stacked batch of frames (leading batch axis). See module docstring
+    for the contract; construct via the session/detector, `from_list`,
+    or `stack` -- the raw constructor mirrors the compiled program's
+    outputs."""
+
+    def __init__(self, scores, index, keep, n_valid, tables,
+                 _lists: Optional[list] = None):
+        self._scores = scores          # (..., K) f32, top-k order, -inf pad
+        self._index = index            # (..., K) i32 rows into tables.boxes
+        self._keep = keep              # (..., K) bool NMS keep mask
+        self._n_valid = n_valid        # (...,)   i32 threshold candidates
+        self._tables = tables          # static: .boxes (N,4), .scales (N,), .k
+        self._lists = _lists           # cached host decode
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def empty(cls, tables) -> "Detections":
+        """Single-frame empty result (frame smaller than one window)."""
+        return cls(np.zeros((0,), np.float32), np.zeros((0,), np.int32),
+                   np.zeros((0,), bool), 0, tables, _lists=[[]])
+
+    @classmethod
+    def empty_batch(cls, tables, n: int) -> "Detections":
+        """Batched empty result: n frames, zero candidate slots each."""
+        return cls(np.zeros((n, 0), np.float32), np.zeros((n, 0), np.int32),
+                   np.zeros((n, 0), bool), np.zeros((n,), np.int32), tables,
+                   _lists=[[] for _ in range(n)])
+
+    @classmethod
+    def from_list(cls, dets: Sequence[Dict[str, Any]]) -> "Detections":
+        """Wrap host-side detection dicts (e.g. tracker output). Extra
+        keys (track_id, hits, ...) are preserved by to_list()."""
+        dets = list(dets)
+        boxes = np.asarray([d["box"] for d in dets],
+                           np.float32).reshape(-1, 4)
+        scores = np.asarray([d["score"] for d in dets], np.float32)
+        scales = np.asarray([d.get("scale", 1.0) for d in dets], np.float32)
+        k = len(dets)
+        tables = DecodeTables(boxes, scales, k)
+        return cls(scores, np.arange(k, dtype=np.int32),
+                   np.ones((k,), bool), k, tables, _lists=[dets])
+
+    @classmethod
+    def stack(cls, dets: Sequence["Detections"]) -> "Detections":
+        """Stack single-frame results that share decode tables into one
+        batched result (the inverse of .frame(i))."""
+        dets = list(dets)
+        if not dets:
+            raise ValueError("stack() needs at least one Detections")
+        if any(d.batched for d in dets):
+            raise ValueError("stack() takes single-frame Detections")
+        t0 = dets[0]._tables
+        for d in dets[1:]:
+            same = d._tables is t0 or (
+                d._tables.k == t0.k
+                and np.array_equal(d._tables.boxes, t0.boxes)
+                and np.array_equal(d._tables.scales, t0.scales))
+            if not same:
+                raise ValueError("stack() needs results from the same "
+                                 "compiled program (same decode tables)")
+        return cls(np.stack([np.asarray(d._scores) for d in dets]),
+                   np.stack([np.asarray(d._index) for d in dets]),
+                   np.stack([np.asarray(d._keep) for d in dets]),
+                   np.asarray([int(d._n_valid) for d in dets], np.int32),
+                   t0)
+
+    # -------------------------------------------------------- structure
+    @property
+    def batched(self) -> bool:
+        return np.ndim(self._scores) == 2
+
+    @property
+    def batch_size(self) -> int:
+        if not self.batched:
+            raise ValueError("single-frame Detections has no batch axis")
+        return int(np.shape(self._scores)[0])
+
+    def frame(self, i: int) -> "Detections":
+        """Slice one frame out of a batched result (no host sync)."""
+        if not self.batched:
+            raise ValueError("frame() on a single-frame Detections")
+        lists = None if self._lists is None else [self._lists[i]]
+        return Detections(self._scores[i], self._index[i], self._keep[i],
+                          self._n_valid[i], self._tables, _lists=lists)
+
+    def block_until_ready(self) -> "Detections":
+        """Wait for the device computation backing this result."""
+        jax.block_until_ready((self._scores, self._index,
+                               self._keep, self._n_valid))
+        return self
+
+    # ----------------------------------------------------------- decode
+    @property
+    def saturated(self):
+        """True when more candidates cleared the score threshold than
+        the program's top-k (`max_detections`) could hold -- the tail
+        was dropped BEFORE NMS. bool for a frame, (B,) array per batch."""
+        n_valid = np.asarray(self._n_valid)
+        if self.batched:
+            return n_valid > self._tables.k
+        return bool(int(n_valid) > self._tables.k)
+
+    def _decode_frame(self, scores, index, keep, n_valid) -> List[dict]:
+        top = np.asarray(scores)
+        idx = np.asarray(index)
+        kp = np.asarray(keep)
+        n_valid = int(n_valid)
+        if n_valid > self._tables.k:
+            warnings.warn(
+                f"{n_valid} detection candidates cleared the "
+                f"threshold but max_detections={self._tables.k}; the "
+                f"lowest-scoring {n_valid - self._tables.k} were "
+                f"dropped before NMS (lowest kept score {top[-1]:.3f})",
+                RuntimeWarning, stacklevel=4)
+        kept = np.flatnonzero(kp & np.isfinite(top))
+        boxes = self._tables.boxes[idx[kept]]
+        scales = self._tables.scales[idx[kept]]
+        return [{"box": tuple(float(v) for v in boxes[r]),
+                 "score": float(top[kept[r]]),
+                 "scale": float(scales[r])}
+                for r in range(len(kept))]
+
+    def _decoded(self) -> list:
+        if self._lists is None:
+            if self.batched:
+                top = np.asarray(self._scores)
+                idx = np.asarray(self._index)
+                kp = np.asarray(self._keep)
+                nv = np.asarray(self._n_valid)
+                self._lists = [self._decode_frame(top[i], idx[i], kp[i],
+                                                  nv[i])
+                               for i in range(top.shape[0])]
+            else:
+                self._lists = [self._decode_frame(
+                    self._scores, self._index, self._keep, self._n_valid)]
+        return self._lists
+
+    def to_list(self):
+        """The legacy host contract: list of detection dicts for a
+        frame, list of per-frame lists for a batch."""
+        lists = self._decoded()
+        return lists if self.batched else lists[0]
+
+    # ---------------------------------------------- kept-array accessors
+    def _kept(self) -> List[dict]:
+        if self.batched:
+            raise ValueError("array accessors are per-frame; use "
+                             ".frame(i) or .to_list() on a batch")
+        return self._decoded()[0]
+
+    @property
+    def boxes(self) -> np.ndarray:
+        """(M, 4) kept boxes as (y0, x0, y1, x1), descending score."""
+        return np.asarray([d["box"] for d in self._kept()],
+                          np.float32).reshape(-1, 4)
+
+    @property
+    def scores(self) -> np.ndarray:
+        return np.asarray([d["score"] for d in self._kept()], np.float32)
+
+    @property
+    def scales(self) -> np.ndarray:
+        return np.asarray([d["scale"] for d in self._kept()], np.float32)
+
+    def __len__(self) -> int:
+        """Batch: number of frames. Single frame: kept detections."""
+        return self.batch_size if self.batched else len(self._kept())
+
+    def __iter__(self) -> Iterator:
+        """Batch: per-frame Detections. Single frame: detection dicts."""
+        if self.batched:
+            return (self.frame(i) for i in range(self.batch_size))
+        return iter(self._kept())
+
+    def __repr__(self) -> str:
+        if self.batched:
+            return (f"Detections(batch={self.batch_size}, "
+                    f"k={self._tables.k})")
+        if self._lists is not None:
+            return f"Detections(n={len(self._lists[0])}, decoded)"
+        return f"Detections(k={self._tables.k}, device-resident)"
+
+
+def _flatten(d: Detections):
+    return ((d._scores, d._index, d._keep, d._n_valid), d._tables)
+
+
+def _unflatten(tables, children) -> Detections:
+    return Detections(*children, tables)
+
+
+jax.tree_util.register_pytree_node(Detections, _flatten, _unflatten)

@@ -1,0 +1,207 @@
+"""DetectionSession -- the one host-facing entry point of the system.
+
+The paper's co-processor has a single command interface the host CPU
+drives (§VI); the repro had grown five -- `detect()`,
+`FrameDetector.__call__`, `detect_batch`, `VideoDetector.process_clip`,
+`DetectionService.detect_frames` -- each with its own config and result
+shape. `DetectionSession` owns the SVM parameters and the compiled
+detection programs once, and exposes every path behind one facade built
+from one `PipelineConfig`:
+
+    session = DetectionSession.train(presets("paper"))   # or (svm, cfg)
+    session.warmup([(480, 640), (8, 480, 640)])          # compile ahead
+    dets   = session.detect(frame)          # -> Detections (lazy decode)
+    batch  = session.detect_batch(frames)   # -> batched Detections
+    frames = session.stream(clip)           # -> tracked, per-frame
+    svc    = session.serve().start()        # -> DetectionService
+
+Compiled-program policy: programs are cached per frame-shape bucket in
+the module-level lru caches of core/detector.py (shared across sessions
+with equal configs -- a second session costs nothing). `warmup(shapes)`
+compiles ahead of traffic, `cache_stats()` reports hits/misses/size,
+`clear_cache()` evicts (process-wide; documented in DESIGN.md §8).
+
+SVM parameters round-trip through checkpoint/manager.py
+(`session.save(dir)` / `DetectionSession.load(dir, cfg)`), so CLI runs
+and services skip retraining.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import PipelineConfig, presets
+from repro.api.results import Detections
+from repro.core.detector import FrameDetector, _batch_fn, _frame_program
+from repro.core.hog import hog_descriptor
+from repro.core.svm import SVMParams, train_svm
+from repro.core.video import Tracker
+
+ConfigLike = Union[PipelineConfig, str, None]
+
+
+def _as_config(config: ConfigLike) -> PipelineConfig:
+    if config is None:
+        return PipelineConfig()
+    if isinstance(config, str):
+        return presets(config)
+    return config
+
+
+class DetectionSession:
+    """SVM params + one PipelineConfig -> every detection path.
+
+    Construct with trained params, or via `train` (synthetic data,
+    config.train schedule) or `load` (checkpoint directory).
+    """
+
+    def __init__(self, svm: SVMParams, config: ConfigLike = None):
+        self.config = _as_config(config)
+        self.svm = svm
+        self.detector = FrameDetector(svm, self.config.detector)
+        self.train_losses = None       # set by train()
+        self._warm: set = set()
+        self._stats = {"frames": 0, "batches": 0, "clips": 0}
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def train(cls, config: ConfigLike = None, n_pos: int = 1500,
+              n_neg: int = 1000, seed: int = 0, data_cfg=None,
+              rng: Optional[np.random.Generator] = None
+              ) -> "DetectionSession":
+        """Train the SVM on synthetic pedestrian windows using the
+        tree's `hog` geometry and `train` schedule. Pass `rng` to
+        share a caller's stream (it advances by the window draws)."""
+        from repro.data.synth_pedestrian import (PedestrianDataConfig,
+                                                 make_windows)
+        config = _as_config(config)
+        if rng is None:
+            rng = np.random.default_rng(seed)
+        x, y = make_windows(n_pos, n_neg,
+                            data_cfg or PedestrianDataConfig(), rng)
+        feats = hog_descriptor(jnp.asarray(x), config.hog)
+        svm, losses = train_svm(feats, jnp.asarray(y), config.train)
+        session = cls(svm, config)
+        session.train_losses = losses
+        return session
+
+    @classmethod
+    def load(cls, path: str, config: ConfigLike = None,
+             step: Optional[int] = None) -> "DetectionSession":
+        """Restore SVM params saved by `save` (checkpoint/manager.py
+        layout); `step=None` takes the latest committed step."""
+        from repro.checkpoint.manager import CheckpointManager
+        config = _as_config(config)
+        mgr = CheckpointManager(path)
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {path}")
+        skeleton = {
+            "w": jax.ShapeDtypeStruct((config.hog.n_features,), jnp.float32),
+            "b": jax.ShapeDtypeStruct((), jnp.float32)}
+        return cls(mgr.restore(step, skeleton), config)
+
+    def save(self, path: str, step: int = 0) -> None:
+        """Persist the SVM params (atomic-commit checkpoint layout)."""
+        from repro.checkpoint.manager import CheckpointManager
+        CheckpointManager(path).save(step, self.svm)
+
+    # ------------------------------------------------------------ facade
+    def detect(self, image) -> Detections:
+        """One frame -> Detections (device-resident, lazy decode)."""
+        self._stats["frames"] += 1
+        return self.detector.detect_raw(image)
+
+    def detect_batch(self, frames) -> Detections:
+        """Stacked (B, H, W[, 3]) array or frame list -> one batched
+        Detections; same one-bucket-per-call contract as the detector."""
+        self._stats["batches"] += 1
+        return self.detector.detect_batch_raw(frames)
+
+    def stream(self, frames, batch_size: int = 8,
+               tracker: Optional[Tracker] = None) -> List[Detections]:
+        """Recorded clip -> per-frame TRACKED detections.
+
+        Detection runs through the batched device path in `batch_size`
+        chunks; the IoU tracker (config.tracker) associates in frame
+        order, so `to_list()` entries carry track_id/hits/misses. Pass
+        a Tracker to keep identities across multiple stream() calls.
+        """
+        self._stats["clips"] += 1
+        trk = Tracker(self.config.tracker) if tracker is None else tracker
+        n = len(frames)
+        out: List[Detections] = []
+        for i in range(0, n, max(1, batch_size)):
+            chunk = [frames[j] for j in range(i, min(i + batch_size, n))]
+            per_frame = (self.detector.detect_batch(chunk)
+                         if len(chunk) > 1 else [self.detector(chunk[0])])
+            out.extend(Detections.from_list(trk.update(d))
+                       for d in per_frame)
+        return out
+
+    def serve(self, **overrides) -> "DetectionService":
+        """Build a DetectionService on THIS session's detector and
+        config (service knobs from config.service; any engine kwarg can
+        be overridden). Caller starts/stops it."""
+        from repro.serve.engine import DetectionService
+        sc = self.config.service
+        opts = dict(batch_size=sc.window_batch,
+                    cfg=self.config.hog,
+                    path=self.config.detector.backend,
+                    max_wait_ms=sc.max_wait_ms,
+                    detector=self.config.detector,
+                    frame_batch=sc.frame_batch,
+                    max_pending_frames=sc.max_pending_frames)
+        # an explicit detector override builds its own FrameDetector;
+        # otherwise the service shares this session's handle (and with
+        # it every already-compiled program). frame_detector rides in
+        # opts so callers can override it like any other engine kwarg.
+        opts["frame_detector"] = \
+            None if "detector" in overrides else self.detector
+        opts.update(overrides)
+        return DetectionService(self.svm, **opts)
+
+    # --------------------------------------------- compiled-program cache
+    def warmup(self, shapes: Iterable[Tuple[int, ...]]) -> Dict:
+        """Compile ahead of traffic. `shapes` mixes (h, w) single-frame
+        and (B, h, w) batched entries; each compiles (and runs on a
+        zero frame) exactly the program live traffic of that shape
+        would hit. Returns cache_stats()."""
+        for s in shapes:
+            s = tuple(int(v) for v in s)
+            if len(s) == 2:
+                d = self.detector.detect_raw(np.zeros(s + (3,), np.uint8))
+            elif len(s) == 3:
+                d = self.detector.detect_batch_raw(
+                    np.zeros(s + (3,), np.uint8))
+            else:
+                raise ValueError(
+                    f"warmup shape must be (h, w) or (B, h, w), got {s}")
+            d.block_until_ready()
+            self._warm.add(s)
+        return self.cache_stats()
+
+    def cache_stats(self) -> Dict:
+        """Hit/miss/size counters of the process-wide compiled-program
+        caches plus this session's call and warmup bookkeeping."""
+        fi = _frame_program.cache_info()
+        bi = _batch_fn.cache_info()
+        return {
+            "frame_programs": {"hits": fi.hits, "misses": fi.misses,
+                               "size": fi.currsize, "maxsize": fi.maxsize},
+            "batch_programs": {"hits": bi.hits, "misses": bi.misses,
+                               "size": bi.currsize, "maxsize": bi.maxsize},
+            "warmed": sorted(self._warm),
+            "calls": dict(self._stats),
+        }
+
+    def clear_cache(self) -> None:
+        """Evict ALL compiled detection programs (process-wide: the
+        caches are shared by every session/detector in the process)."""
+        _frame_program.cache_clear()
+        _batch_fn.cache_clear()
+        self._warm.clear()

@@ -41,7 +41,6 @@ batch axis). This is the hot path the video/tracking layer
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import lru_cache, partial
 from typing import Callable, List, Sequence, Tuple
 
@@ -178,6 +177,20 @@ def _frame_hw(shape) -> Tuple[int, int]:
         f"{tuple(shape)}")
 
 
+class DecodeTables:
+    """Static host-side decode geometry of one compiled program: the
+    flattened box/scale tables and the top-k size. Built once per
+    FrameProgram; identity hash/eq on purpose so it can ride as the
+    aux data of the api-layer Detections pytree."""
+
+    __slots__ = ("boxes", "scales", "k")
+
+    def __init__(self, boxes: np.ndarray, scales: np.ndarray, k: int):
+        self.boxes = boxes             # (N, 4) window boxes, frame coords
+        self.scales = scales           # (N,) nominal pyramid scale per row
+        self.k = k                     # top-k size
+
+
 @dataclasses.dataclass(frozen=True)
 class FrameProgram:
     """One compiled multi-scale program + its static decode tables."""
@@ -190,6 +203,7 @@ class FrameProgram:
     per_scale: Tuple[Tuple[float, int, int], ...] = ()
     #                (scale, score-map PH, score-map PW) per pyramid level
     raw: "Callable" = None         # unjitted fn -- what detect_batch vmaps
+    tables: "DecodeTables" = None  # the boxes/scales/k above, as one holder
 
 
 @lru_cache(maxsize=64)
@@ -226,8 +240,10 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
         scale_rows.append(np.full(sph * spw, s, np.float32))
 
     if not box_rows:
-        return FrameProgram(None, np.zeros((0, 4), np.float32),
-                            np.zeros((0,), np.float32), 0, 0, ())
+        empty4 = np.zeros((0, 4), np.float32)
+        empty1 = np.zeros((0,), np.float32)
+        return FrameProgram(None, empty4, empty1, 0, 0, (),
+                            tables=DecodeTables(empty4, empty1, 0))
 
     boxes_tab = np.concatenate(box_rows)
     scale_tab = np.concatenate(scale_rows)
@@ -252,7 +268,8 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
         return top, idx, keep, jnp.sum(valid)
 
     return FrameProgram(jax.jit(fn), boxes_tab, scale_tab, n, k,
-                        tuple(per_scale), fn)
+                        tuple(per_scale), fn,
+                        tables=DecodeTables(boxes_tab, scale_tab, k))
 
 
 @lru_cache(maxsize=64)
@@ -343,43 +360,32 @@ class FrameDetector:
         # the last valid windows near the pad seam
         return jnp.pad(gray, ((0, ph - h), (0, pw - w)), mode="edge")
 
-    @staticmethod
-    def _decode(prog: FrameProgram, top: np.ndarray, idx: np.ndarray,
-                keep: np.ndarray, n_valid: int) -> List[dict]:
-        """Host side: kept top-k indices -> list of detection dicts via
-        the static geometry tables."""
-        if n_valid > prog.k:
-            # more candidates cleared the threshold than top-k slots:
-            # the tail was dropped before NMS -- raise
-            # cfg.max_detections if it matters
-            warnings.warn(
-                f"{n_valid} detection candidates cleared the "
-                f"threshold but max_detections={prog.k}; the lowest-"
-                f"scoring {n_valid - prog.k} were dropped before "
-                f"NMS (lowest kept score {top[-1]:.3f})",
-                RuntimeWarning, stacklevel=3)
-        kept = np.flatnonzero(keep & np.isfinite(top))
-        boxes = prog.boxes[idx[kept]]
-        scales = prog.scales[idx[kept]]
-        return [{"box": tuple(float(v) for v in boxes[r]),
-                 "score": float(top[kept[r]]),
-                 "scale": float(scales[r])}
-                for r in range(len(kept))]
+    def detect_raw(self, image: Array) -> "Detections":
+        """One frame -> device-resident typed Detections (api layer).
 
-    def __call__(self, image: Array) -> List[dict]:
+        Nothing syncs to host here: the result wraps the compiled
+        program's top-k/keep tensors plus the static decode tables, and
+        decodes lazily on first host access (`.to_list()` et al.).
+        """
+        from repro.api.results import Detections
         gray = self._to_gray(image)
         h, w = int(gray.shape[0]), int(gray.shape[1])
         prog, ph, pw = self.program_for(h, w)
         if prog.fn is None:
-            return []
+            return Detections.empty(prog.tables)
         top, idx, keep, n_valid = prog.fn(self._pad_to(gray, ph, pw),
                                           self.svm["w"], self.svm["b"],
                                           jnp.asarray([h, w], jnp.float32))
-        return self._decode(prog, np.asarray(top), np.asarray(idx),
-                            np.asarray(keep), int(n_valid))
+        return Detections(top, idx, keep, n_valid, prog.tables)
 
-    def detect_batch(self, frames) -> List[List[dict]]:
-        """Batched frame path: B frames -> B detection lists in one step.
+    def __call__(self, image: Array) -> List[dict]:
+        """Legacy per-frame contract (list of dicts). Thin shim over
+        `detect_raw` -- prefer `repro.api.DetectionSession.detect`,
+        which returns the typed result without the forced host sync."""
+        return self.detect_raw(image).to_list()
+
+    def detect_batch_raw(self, frames) -> "Detections":
+        """Batched frame path: B frames -> one batched Detections.
 
         `frames` is a stacked (B, H, W[, 3]) array or a sequence of
         frames. All frames must land in the SAME padded shape bucket
@@ -387,10 +393,14 @@ class FrameDetector:
         bucket before calling) -- mixed buckets raise ValueError. The
         compiled program is the single-frame pyramid program vmapped
         over the batch, jitted once per (bucket, B) pair; per-frame
-        top-k + NMS run device-side and the host syncs once.
+        top-k + NMS run device-side and the host never syncs until the
+        result is decoded.
         """
+        from repro.api.results import Detections
         if isinstance(frames, (list, tuple)) and not frames:
-            return []
+            return Detections.empty_batch(
+                DecodeTables(np.zeros((0, 4), np.float32),
+                             np.zeros((0,), np.float32), 0), 0)
         uniform = not isinstance(frames, (list, tuple)) or \
             len({np.shape(f) for f in frames}) == 1
         if uniform:
@@ -411,7 +421,9 @@ class FrameDetector:
                     f"{shape}")
             n, h, w = int(shape[0]), int(shape[1]), int(shape[2])
             if n == 0:
-                return []
+                return Detections.empty_batch(
+                    DecodeTables(np.zeros((0, 4), np.float32),
+                                 np.zeros((0,), np.float32), 0), 0)
             hws = [(h, w)] * n
         else:
             # mixed true sizes: grayscale + pad per frame on host, then
@@ -426,7 +438,7 @@ class FrameDetector:
                 f"{sorted(buckets)}; group frames by bucket first")
         prog, ph, pw = self.program_for(*hws[0])
         if prog.fn is None:
-            return [[] for _ in range(n)]
+            return Detections.empty_batch(prog.tables, n)
         if uniform:
             fn = _batch_fn(h, w, ph, pw, n, self.cfg)
             frames_b = jnp.asarray(batch)
@@ -436,14 +448,22 @@ class FrameDetector:
         hw_b = jnp.asarray(hws, jnp.float32)
         top, idx, keep, n_valid = fn(frames_b, self.svm["w"],
                                      self.svm["b"], hw_b)
-        top, idx, keep, n_valid = (np.asarray(top), np.asarray(idx),
-                                   np.asarray(keep), np.asarray(n_valid))
-        return [self._decode(prog, top[i], idx[i], keep[i], int(n_valid[i]))
-                for i in range(n)]
+        return Detections(top, idx, keep, n_valid, prog.tables)
+
+    def detect_batch(self, frames) -> List[List[dict]]:
+        """Legacy batched contract (B per-frame dict lists, one host
+        sync). Thin shim over `detect_batch_raw`."""
+        return self.detect_batch_raw(frames).to_list()
 
 
 def detect(image_rgb: Array, svm: SVMParams,
            cfg: DetectorConfig = DetectorConfig()) -> List[dict]:
     """Multi-scale detection. Returns [{box:(y0,x0,y1,x1), score, scale}]
-    sorted by descending score (top-k order)."""
+    sorted by descending score (top-k order).
+
+    Deprecated shim: the unified entry point is
+    `repro.api.DetectionSession.detect`, which reuses one session's
+    compiled programs across calls and returns typed Detections
+    (equivalence pinned by tests/test_api_session.py).
+    """
     return FrameDetector(svm, cfg)(image_rgb)

@@ -157,31 +157,37 @@ def _center(box: np.ndarray) -> np.ndarray:
 
 
 class VideoDetector:
-    """FrameDetector + Tracker: the camera->detection stream of §VI.
+    """Tracked detection stream: the camera->detection stream of §VI.
 
-    `step(frame)` serves a live stream; `process_clip(frames)` runs a
-    recorded clip through the batched device path (`detect_batch`,
-    `batch_size` frames per dispatch) and associates in frame order, so
-    throughput comes from batching while track state stays sequential.
+    Deprecated shim over `repro.api.DetectionSession` (which owns the
+    compiled programs and the typed Detections results): `step(frame)`
+    serves a live stream; `process_clip(frames)` routes a recorded clip
+    through `session.stream` (batched device path, `batch_size` frames
+    per dispatch, association in frame order). Equivalence with the
+    session path is pinned by tests/test_api_session.py.
     """
 
     def __init__(self, svm: SVMParams,
                  cfg: DetectorConfig = DetectorConfig(),
                  tracker: TrackerConfig = TrackerConfig()):
-        self.detector = FrameDetector(svm, cfg)
+        # deferred import: repro.api sits on top of this module
+        from repro.api.config import PipelineConfig
+        from repro.api.session import DetectionSession
+        self.session = DetectionSession(
+            svm, PipelineConfig(hog=cfg.hog, detector=cfg, tracker=tracker))
         self.tracker = Tracker(tracker)
 
+    @property
+    def detector(self) -> FrameDetector:
+        """The session's device-program handle (legacy attribute)."""
+        return self.session.detector
+
     def step(self, frame) -> List[Dict]:
-        return self.tracker.update(self.detector(frame))
+        return self.tracker.update(self.session.detect(frame).to_list())
 
     def process_clip(self, frames, batch_size: int = 8) -> List[List[Dict]]:
         """(T, H, W[, 3]) stacked clip or list of frames -> per-frame
         tracked detections."""
-        n = len(frames)
-        out: List[List[Dict]] = []
-        for i in range(0, n, max(1, batch_size)):
-            chunk = [frames[j] for j in range(i, min(i + batch_size, n))]
-            per_frame = (self.detector.detect_batch(chunk)
-                         if len(chunk) > 1 else [self.detector(chunk[0])])
-            out.extend(self.tracker.update(d) for d in per_frame)
-        return out
+        return [d.to_list()
+                for d in self.session.stream(frames, batch_size=batch_size,
+                                             tracker=self.tracker)]

@@ -1,8 +1,16 @@
-"""Detection launcher: train (or load) an SVM and run the device-resident
-multi-scale detector on synthetic scenes -- the paper's system as a CLI.
+"""Detection launcher: one DetectionSession (repro.api) end to end --
+train or load an SVM, run the device-resident multi-scale detector on
+synthetic scenes, report recall and top-k saturation.
+
+Repeated runs skip the SVM train: `--save DIR` checkpoints the params
+after training (checkpoint/manager.py atomic layout), `--load DIR`
+restores them (falling back to training, then saving if --save was also
+given -- so `--load D --save D` is "train once, reuse forever").
 
 Usage: PYTHONPATH=src python -m repro.launch.detect
            [--scenes 3] [--fast] [--backend ref|kernel|fused]
+           [--preset paper|faithful|perf|default]
+           [--save DIR] [--load DIR]
 """
 from __future__ import annotations
 
@@ -10,46 +18,87 @@ import argparse
 import sys
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DetectorConfig, train_svm
-from repro.core.detector import FrameDetector
-from repro.core.hog import PAPER_HOG, hog_descriptor
+from repro.api import DetectionSession, PipelineConfig, presets
+from repro.core.detector import DetectorConfig
 from repro.core.svm import SVMTrainConfig
-from repro.data.synth_pedestrian import (PedestrianDataConfig, make_scene,
-                                         make_windows)
+from repro.data.synth_pedestrian import make_scene
+
+
+def build_config(args) -> PipelineConfig:
+    import dataclasses
+    if args.preset:
+        # keep the preset's detector (backend, batch_chunk, ...);
+        # --backend, when given explicitly, overrides it
+        base = presets(args.preset)
+        det = dataclasses.replace(
+            base.detector, score_threshold=0.5,
+            backend=args.backend or base.detector.backend)
+        return base.replace(detector=det)
+    return PipelineConfig(
+        detector=DetectorConfig(score_threshold=0.5,
+                                backend=args.backend or "ref"),
+        train=SVMTrainConfig(steps=2500, neg_weight=6.0))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenes", type=int, default=2)
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--backend", default="ref",
+    ap.add_argument("--backend", default=None,
                     choices=["ref", "kernel", "fused"],
-                    help="stage backend for the dense HOG pass")
+                    help="stage backend for the dense HOG pass "
+                         "(default: the preset's backend, else ref)")
+    ap.add_argument("--preset", default=None, choices=list(presets()),
+                    help="PipelineConfig preset (numerics + train "
+                         "schedule); default keeps the ref datapath")
+    ap.add_argument("--save", metavar="DIR", default=None,
+                    help="checkpoint the trained SVM params here")
+    ap.add_argument("--load", metavar="DIR", default=None,
+                    help="restore SVM params instead of training "
+                         "(falls back to training if DIR is empty)")
     args = ap.parse_args(argv)
 
-    rng = np.random.default_rng(0)
-    cfg = PedestrianDataConfig()
+    cfg = build_config(args)
     n_pos, n_neg = (500, 350) if args.fast else (1500, 1000)
-    print(f"training SVM on {n_pos}+{n_neg} windows ...")
-    x, y = make_windows(n_pos, n_neg, cfg, rng)
-    feats = hog_descriptor(jnp.asarray(x), PAPER_HOG)
-    svm, _ = train_svm(feats, jnp.asarray(y),
-                       SVMTrainConfig(steps=2500, neg_weight=6.0))
 
-    detector = FrameDetector(svm, DetectorConfig(score_threshold=0.5,
-                                                 backend=args.backend))
+    # one rng stream for training windows AND evaluation scenes (the
+    # seed CLI's contract: scenes are drawn from the post-train state)
+    rng = np.random.default_rng(0)
+    session = None
+    if args.load:
+        try:
+            session = DetectionSession.load(args.load, cfg)
+            print(f"loaded SVM params from {args.load} "
+                  f"(skipping the {cfg.train.steps}-step train)")
+            # advance the stream by the skipped window draws so the
+            # scenes below are identical to a train-path run
+            from repro.data.synth_pedestrian import (PedestrianDataConfig,
+                                                     make_windows)
+            make_windows(n_pos, n_neg, PedestrianDataConfig(), rng)
+        except FileNotFoundError:
+            print(f"no checkpoint under {args.load}; training")
+    if session is None:
+        print(f"training SVM on {n_pos}+{n_neg} windows "
+              f"({cfg.train.steps} steps) ...")
+        session = DetectionSession.train(cfg, n_pos=n_pos, n_neg=n_neg,
+                                         rng=rng)
+        if args.save:
+            session.save(args.save)
+            print(f"saved SVM params to {args.save}")
+
     hits = 0
     for i in range(args.scenes):
         scene, truth = make_scene(rng, 320, 240, n_people=2)
         t0 = time.perf_counter()
-        dets = detector(scene)
+        result = session.detect(scene)
+        dets = result.to_list()
         ms = (time.perf_counter() - t0) * 1e3
         tag = "compile+run" if i == 0 else "steady"
+        sat = " [top-k saturated]" if result.saturated else ""
         print(f"scene {i}: {len(truth)} people, {len(dets)} detections "
-              f"({ms:.1f} ms {tag})")
+              f"({ms:.1f} ms {tag}){sat}")
         for d in dets[:4]:
             y0, x0, y1, x1 = d["box"]
             print(f"   ({y0:5.0f},{x0:5.0f})-({y1:5.0f},{x1:5.0f}) "
@@ -59,6 +108,9 @@ def main(argv=None):
                      for d in dets)
             hits += ok
     print(f"recall over scenes: {hits}/{2*args.scenes}")
+    stats = session.cache_stats()
+    print(f"compiled programs: {stats['frame_programs']['size']} "
+          f"(hits {stats['frame_programs']['hits']})")
     return 0
 
 

@@ -1,8 +1,18 @@
-"""Serving launcher: --arch <id> --smoke: prefill + decode a batch of
-prompts with the layer-stacked KV(/SSM) cache and print tokens/s.
+"""Serving launcher, two smokes behind one CLI:
 
-Usage: PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
-          --batch 4 --prompt-len 16 --new-tokens 32
+LM mode (default): --arch <id> prefill + decode a batch of prompts with
+the layer-stacked KV(/SSM) cache and print tokens/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
+        --batch 4 --prompt-len 16 --new-tokens 32
+
+Detection mode: --detect builds a repro.api DetectionSession (training
+a quick SVM or loading one with --load), starts session.serve() -- the
+micro-batching DetectionService -- streams synthetic frames through it,
+and prints per-frame latency, saturation, and service stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --detect [--frames 6]
+        [--preset paper] [--load DIR]
 """
 from __future__ import annotations
 
@@ -10,22 +20,92 @@ import argparse
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config
-from repro.models.model import init_params
-from repro.serve.engine import generate
+def _detect_smoke(args) -> int:
+    import numpy as np
+
+    from repro.api import DetectionSession, PipelineConfig, presets
+    from repro.core.detector import DetectorConfig
+    from repro.core.svm import SVMTrainConfig
+    from repro.data.synth_pedestrian import make_scene
+
+    if args.preset:
+        cfg = presets(args.preset)
+    else:
+        cfg = PipelineConfig(
+            detector=DetectorConfig(score_threshold=0.5),
+            train=SVMTrainConfig(steps=1200, neg_weight=6.0))
+
+    session = None
+    if args.load:
+        try:
+            session = DetectionSession.load(args.load, cfg)
+            print(f"loaded SVM params from {args.load}")
+        except FileNotFoundError:
+            print(f"no checkpoint under {args.load}; training")
+    if session is None:
+        print(f"training a quick SVM ({cfg.train.steps} steps) ...")
+        session = DetectionSession.train(cfg, n_pos=500, n_neg=350)
+
+    service = session.serve().start()
+    rng = np.random.default_rng(0)
+    frames = [make_scene(rng, 240, 320, n_people=2)[0]
+              for _ in range(args.frames)]
+    print(f"streaming {args.frames} 320x240 frames through "
+          f"session.serve() ...")
+    t0 = time.time()
+    results = service.detect_frames(frames)
+    wall = time.time() - t0
+    ms = [r["ms"] for r in results]
+    n_sat = sum(bool(r.get("saturated")) for r in results)
+    n_box = sum(len(r["detections"]) for r in results)
+    if len(ms) > 1:
+        print(f"wall          {wall:.2f}s  first={ms[0]:.0f} ms "
+              f"(compile), steady={np.mean(ms[1:]):.0f} ms")
+    else:
+        print(f"wall          {wall:.2f}s")
+    print(f"boxes         {n_box} total, {n_sat} frames top-k saturated")
+    s = service.stats
+    print(f"service stats frames={s['frames']} "
+          f"batches={s['frame_batches']} "
+          f"occupancy={s['frame_occupancy']:.2f}")
+    service.stop()
+    return 0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--arch", default=None,
+                    help="LM serving smoke: arch id (see repro.configs)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--detect", action="store_true",
+                    help="detection-service smoke over repro.api "
+                         "(DetectionSession.serve)")
+    ap.add_argument("--frames", type=int, default=6,
+                    help="frames to stream in --detect mode")
+    ap.add_argument("--preset", default=None,
+                    help="PipelineConfig preset for --detect")
+    ap.add_argument("--load", metavar="DIR", default=None,
+                    help="--detect: restore SVM params from a "
+                         "checkpoint dir instead of training")
     args = ap.parse_args(argv)
+
+    if args.detect:
+        return _detect_smoke(args)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models.model import init_params
+    from repro.serve.engine import generate
+
+    if args.arch not in ARCH_IDS:
+        ap.error(f"--arch is required unless --detect "
+                 f"(choices: {', '.join(ARCH_IDS)})")
 
     cfg = get_config(args.arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))

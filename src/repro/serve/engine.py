@@ -6,6 +6,10 @@ size, classified in one TPU step, results returned per request. This is
 the Fig. 6 datapath plus the batching/queueing layer an FPGA front-end
 would implement in NIOS/ARM (the paper's "future development" §VI).
 
+The canonical way to build one is `repro.api.DetectionSession.serve()`,
+which wires the service from a single PipelineConfig and shares the
+session's compiled detection programs (`frame_detector=` injection).
+
 Full-FRAME requests (`submit_frame` / `detect_frames`) route through the
 device-resident multi-scale detector (core/detector.py:FrameDetector):
 pyramid, dense HOG, thresholding, top-k and NMS all run in one compiled
@@ -81,7 +85,8 @@ class DetectionService:
                  max_wait_ms: float = 2.0,
                  detector: Optional[DetectorConfig] = None,
                  frame_batch: int = 8,
-                 max_pending_frames: int = 256):
+                 max_pending_frames: int = 256,
+                 frame_detector: Optional[FrameDetector] = None):
         self.svm = svm
         self.batch = batch_size
         self.cfg = cfg
@@ -104,9 +109,11 @@ class DetectionService:
         self._work = threading.Event()
         self._stop = False
         self._fn = jax.jit(partial(classify_windows, cfg=cfg, path=path))
-        self._detector = FrameDetector(
-            svm, detector if detector is not None
-            else DetectorConfig(hog=cfg, backend=path))
+        # an injected handle (DetectionSession.serve) shares the
+        # session's compiled programs; otherwise build our own
+        self._detector = frame_detector if frame_detector is not None \
+            else FrameDetector(svm, detector if detector is not None
+                               else DetectorConfig(hog=cfg, backend=path))
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0,
                       "frames": 0, "frame_ms": 0.0, "frame_boxes": 0,
@@ -168,7 +175,9 @@ class DetectionService:
 
     def detect_frames(self, frames: List[np.ndarray],
                       timeout: float = 120.0) -> List[Dict[str, Any]]:
-        """Full-frame requests: each result is {detections, ms}; a
+        """Full-frame requests: each result is {detections, ms,
+        saturated} (saturated = the frame's threshold candidates
+        overflowed the program's top-k, see api/results.py); a
         request that raised -- or was shed by backpressure -- carries
         an extra "error" key instead of hanging or aborting the rest
         of the submission (the worker survives bad inputs). Callers
@@ -256,17 +265,23 @@ class DetectionService:
         t0 = time.perf_counter()
         try:
             if len(group) == 1:
-                dets_per = [self._detector(group[0].frame)]
+                results = [self._detector.detect_raw(group[0].frame)]
             else:
-                dets_per = self._detector.detect_batch(
+                batch = self._detector.detect_batch_raw(
                     [r.frame for r in group])
+                results = [batch.frame(i) for i in range(len(group))]
+            # decode inside the timed region so per-frame ms keeps the
+            # legacy meaning (device step + host decode)
+            dets_per = [(res.to_list(), bool(res.saturated))
+                        for res in results]
         except Exception:
             # batch failed as a whole: fall back to per-frame so one
             # poisonous frame cannot fail its innocent batch-mates
             dets_per = []
             for r in group:
                 try:
-                    dets_per.append(self._detector(r.frame))
+                    res = self._detector.detect_raw(r.frame)
+                    dets_per.append((res.to_list(), bool(res.saturated)))
                 except Exception as e:
                     dets_per.append(e)
         ms = (time.perf_counter() - t0) * 1e3 / len(group)
@@ -277,11 +292,13 @@ class DetectionService:
                     r, {"detections": [], "ms": 0.0,
                         "error": f"{type(dets).__name__}: {dets}"})
                 continue
+            dets, saturated = dets
             self.stats["frames"] += 1
             self.stats["frame_boxes"] += len(dets)
             self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
                 / self.stats["frames"]
-            self._answer_frame(r, {"detections": dets, "ms": ms})
+            self._answer_frame(r, {"detections": dets, "ms": ms,
+                                   "saturated": saturated})
         self.stats["frame_occupancy"] = (
             self.stats["frames"]
             / (self.stats["frame_batches"] * self.frame_batch))

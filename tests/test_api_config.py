@@ -1,0 +1,119 @@
+"""PipelineConfig tree: JSON round-trip, hog single-sourcing, presets."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.api.config import (PipelineConfig, ServiceConfig, presets,
+                              register_preset)
+from repro.core.detector import DetectorConfig
+from repro.core.hog import HOGConfig, PAPER_HOG
+from repro.core.svm import SVMTrainConfig
+from repro.core.video import TrackerConfig
+
+
+# ------------------------------------------------------------ round trip
+
+def test_round_trip_all_presets():
+    """from_dict(to_dict(p)) == p for every registered preset -- both
+    directly and through an actual JSON string (tuples -> lists ->
+    tuples)."""
+    assert presets(), "no presets registered"
+    for name in presets():
+        p = presets(name)
+        assert PipelineConfig.from_dict(p.to_dict()) == p, name
+        assert PipelineConfig.from_json(p.to_json()) == p, name
+
+
+def test_to_dict_is_json_serializable():
+    for name in presets():
+        s = json.dumps(presets(name).to_dict())
+        assert isinstance(json.loads(s), dict)
+
+
+def test_round_trip_custom_tree():
+    p = PipelineConfig(
+        name="custom",
+        hog=HOGConfig(mode="cordic", feat_dtype="bf16"),
+        detector=DetectorConfig(hog=HOGConfig(mode="cordic",
+                                              feat_dtype="bf16"),
+                                scales=(1.0, 0.5), max_detections=17,
+                                backend="kernel", batch_chunk=4),
+        tracker=TrackerConfig(max_misses=5, emit_coasting=True),
+        train=SVMTrainConfig(steps=123, neg_weight=2.5),
+        service=ServiceConfig(window_batch=16, frame_batch=3))
+    rt = PipelineConfig.from_json(p.to_json())
+    assert rt == p
+    assert rt.detector.scales == (1.0, 0.5)          # tuple restored
+    assert isinstance(rt.detector.scales, tuple)
+
+
+def test_from_dict_partial_uses_defaults():
+    p = PipelineConfig.from_dict({"name": "half",
+                                  "detector": {"score_threshold": 0.7}})
+    assert p.name == "half"
+    assert p.detector.score_threshold == 0.7
+    assert p.detector.nms_iou == DetectorConfig().nms_iou
+    assert p.train == SVMTrainConfig()
+
+
+# -------------------------------------------------- hog single-sourcing
+
+def test_detector_hog_follows_tree_hog():
+    p = PipelineConfig(hog=HOGConfig(mode="cordic"))
+    assert p.detector.hog.mode == "cordic"
+    assert p.detector.hog == p.hog
+
+
+def test_tree_hog_promotes_explicit_detector_hog():
+    """Default tree hog + explicit detector hog: the explicit one wins
+    and becomes the tree's hog (one source of truth either way)."""
+    h = HOGConfig(mode="sector", feat_dtype="bf16")
+    p = PipelineConfig(detector=DetectorConfig(hog=h))
+    assert p.hog == h
+    assert p.detector.hog == h
+
+
+def test_explicit_tree_hog_overrides_detector():
+    h = HOGConfig(mode="cordic")
+    p = PipelineConfig(hog=h,
+                       detector=DetectorConfig(hog=HOGConfig(mode="sector"),
+                                               max_detections=9))
+    assert p.detector.hog == h                 # tree hog wins
+    assert p.detector.max_detections == 9      # other fields kept
+
+
+# ---------------------------------------------------------------- presets
+
+def test_builtin_presets_fold_paper_configs():
+    assert {"default", "paper", "faithful", "perf"} <= set(presets())
+    assert presets("paper").hog.mode == "sector"
+    assert presets("faithful").hog.mode == "cordic"
+    assert presets("perf").hog.feat_dtype == "bf16"
+    assert presets("perf").detector.backend == "fused"
+    # the train schedule comes from configs/hog_svm.py
+    assert presets("paper").train.neg_weight == 6.0
+
+
+def test_unknown_preset_raises_with_names():
+    with pytest.raises(ValueError, match="paper"):
+        presets("no-such-preset")
+
+
+def test_register_preset_and_replace():
+    p = register_preset("test-tmp", presets("paper").replace(name="tmp"))
+    try:
+        assert presets("test-tmp") is p
+        assert p.name == "tmp"
+        assert p.hog == presets("paper").hog
+    finally:
+        from repro.api import config as _c
+        _c._PRESETS.pop("test-tmp", None)
+
+
+def test_configs_hashable_for_program_cache():
+    """The detector config inside the tree keys the compiled-program
+    lru cache -- it must stay hashable."""
+    for name in presets():
+        hash(presets(name).detector)
+        hash(presets(name).hog)
