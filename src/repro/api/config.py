@@ -14,7 +14,12 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
 
     presets("paper")      sector-compare binning (TPU-native default)
     presets("faithful")   CORDIC magnitude/angle + NR rsqrt datapath
-    presets("perf")       bf16 descriptors, fused Pallas dense backend
+    presets("perf")       bf16 descriptors through the dense-grid fused
+                          Pallas backend (whole-scene HOG tiled over
+                          VMEM row slabs + MXU matmul scoring with f32
+                          accumulation) and autotuned batch scheduling
+                          (batch_chunk=0: scan-vs-vmap probed per
+                          (bucket, B) at first use)
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -143,10 +148,13 @@ def _register_builtin() -> None:
         name="faithful", hog=hog_svm.FAITHFUL,
         detector=DetectorConfig(hog=hog_svm.FAITHFUL, score_threshold=0.5),
         train=hog_svm.TRAIN))
+    # perf: dense-grid fused Pallas HOG (fused_hog.dense_fused_hog, bf16
+    # descriptors) feeding the MXU matmul scorer with f32 accumulation;
+    # batch_chunk=0 autotunes the detect_batch scan-vs-vmap schedule
     register_preset("perf", PipelineConfig(
         name="perf", hog=hog_svm.PERF,
         detector=DetectorConfig(hog=hog_svm.PERF, score_threshold=0.5,
-                                backend="fused", batch_chunk=8),
+                                backend="fused", batch_chunk=0),
         train=hog_svm.TRAIN))
 
 

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.api.config import PipelineConfig, presets
 from repro.api.results import Detections
-from repro.core.detector import FrameDetector, _batch_fn, _frame_program
+from repro.core.detector import (FrameDetector, _batch_fn, _frame_program,
+                                 _single_fn)
 from repro.core.hog import hog_descriptor
 from repro.core.svm import SVMParams, train_svm
 from repro.core.video import Tracker
@@ -189,10 +190,13 @@ class DetectionSession:
         """Hit/miss/size counters of the process-wide compiled-program
         caches plus this session's call and warmup bookkeeping."""
         fi = _frame_program.cache_info()
+        si = _single_fn.cache_info()
         bi = _batch_fn.cache_info()
         return {
-            "frame_programs": {"hits": fi.hits, "misses": fi.misses,
-                               "size": fi.currsize, "maxsize": fi.maxsize},
+            "frame_programs": {"hits": fi.hits + si.hits,
+                               "misses": fi.misses + si.misses,
+                               "size": fi.currsize + si.currsize,
+                               "maxsize": fi.maxsize + si.maxsize},
             "batch_programs": {"hits": bi.hits, "misses": bi.misses,
                                "size": bi.currsize, "maxsize": bi.maxsize},
             "warmed": sorted(self._warm),
@@ -203,5 +207,6 @@ class DetectionSession:
         """Evict ALL compiled detection programs (process-wide: the
         caches are shared by every session/detector in the process)."""
         _frame_program.cache_clear()
+        _single_fn.cache_clear()
         _batch_fn.cache_clear()
         self._warm.clear()

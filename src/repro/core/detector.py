@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache, partial
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,21 @@ from repro.core.svm import SVMParams
 Array = jax.Array
 
 
+@lru_cache(maxsize=1)
+def _donate() -> bool:
+    """Whether the per-bucket programs request frame-buffer donation.
+
+    jax ignores donation on the CPU backend (with a warning), so
+    donate_argnums is only requested where it can take effect. On TPU
+    the frame/gray buffers of the per-bucket programs are donated: a 4K
+    f32 frame batch is the largest allocation on the hot path and
+    reusing it as the program's scratch removes the double-buffering
+    high-water mark. Evaluated lazily (first detect call, cached) --
+    `jax.default_backend()` initializes the backend, which must not
+    happen at import time, before the user picks a platform."""
+    return jax.default_backend() != "cpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class DetectorConfig:
     hog: HOGConfig = PAPER_HOG
@@ -64,10 +79,12 @@ class DetectorConfig:
     max_detections: int = 256             # device top-k size (K)
     backend: str = "ref"                  # stage backend for dense HOG
     shape_bucket: int = 32                # frames pad up to multiples of this
-    batch_chunk: int = 1                  # detect_batch vmap width: frames
-    #   per vmapped chunk inside the scanned batch program. 1 = scan the
-    #   batch frame-by-frame (best locality on the CPU host); >= B = one
-    #   fully vectorized vmap step (wide accelerators)
+    batch_chunk: int = 0                  # detect_batch vmap width: frames
+    #   per vmapped chunk inside the scanned batch program. 0 = AUTOTUNE:
+    #   probe scan-vs-vmap per (bucket, B) at first use (min-of-k on
+    #   synthetic frames) and cache the winner -- see autotune_report().
+    #   1 = scan the batch frame-by-frame (best locality on CPU hosts);
+    #   >= B = one fully vectorized vmap step (wide accelerators)
 
 
 def scene_blocks(gray: Array, cfg: HOGConfig,
@@ -75,28 +92,53 @@ def scene_blocks(gray: Array, cfg: HOGConfig,
     """Whole-scene normalized block grid: (H, W) -> (BH, BW, 36).
 
     Thin view over the dense layout of the staged pipeline; `backend`
-    selects ref (pure jnp) or the Pallas kernel/fused implementations.
+    selects ref (pure jnp) or the dense-grid Pallas kernel/fused
+    implementations (kernels/dense_grad_hist.py et al.).
     """
     return dense_blocks(gray, cfg, backend)
+
+
+def score_blocks(blocks: Array, w: Array, b: Array,
+                 cfg: HOGConfig = PAPER_HOG, use_kernel: bool = False) -> Array:
+    """Score the dense block grid: (BH, BW, 36) -> (PH, PW).
+
+    score[i, j] = <blocks[i:i+15, j:j+7, :], W> + b. Instead of a
+    15x7x36 conv (which XLA:CPU runs ~6x slower than the equivalent
+    matmul), the window sum factors through the per-offset partial
+    products: ONE (BH*BW, 36) @ (36, 105) matmul computes every block
+    position's contribution to each of the 105 window offsets on the
+    MXU, then 105 shifted adds collate the score map. bf16 block
+    descriptors (the perf preset) feed the matmul directly with f32
+    accumulation. `use_kernel` routes the matmul through the Pallas
+    kernel (kernels/svm_matmul.py:score_matmul) -- the MXU-explicit
+    path used by the kernel/fused backends.
+    """
+    bh, bw = cfg.blocks_hw                              # 15, 7
+    BH, BW, bd = blocks.shape
+    ph, pw = BH - bh + 1, BW - bw + 1
+    flat = blocks.reshape(BH * BW, bd)
+    wt = w.reshape(bh * bw, bd).T.astype(blocks.dtype)  # (36, 105)
+    if use_kernel:
+        from repro.kernels.svm_matmul import score_matmul
+        contrib = score_matmul(flat, wt)
+    else:
+        contrib = jax.lax.dot_general(
+            flat, wt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    contrib = contrib.reshape(BH, BW, bh * bw)
+    out = jnp.zeros((ph, pw), jnp.float32)
+    for di in range(bh):                                # static 15x7 unroll
+        for dj in range(bw):
+            out = out + contrib[di:di + ph, dj:dj + pw, di * bw + dj]
+    return out + b
 
 
 @partial(jax.jit, static_argnames=("cfg", "backend"))
 def score_map(gray: Array, w: Array, b: Array,
               cfg: HOGConfig = PAPER_HOG, backend: str = "ref") -> Array:
-    """Dense SVM score map at cell (8-px) stride. gray: (H, W) -> (PH, PW).
-
-    score[i, j] = <blocks[i:i+15, j:j+7, :], W> + b  == valid conv.
-    """
+    """Dense SVM score map at cell (8-px) stride. gray: (H, W) -> (PH, PW)."""
     blocks = scene_blocks(gray, cfg, backend)           # (BH, BW, 36)
-    bh, bw = cfg.blocks_hw                              # 15, 7
-    wk = w.reshape(bh, bw, cfg.block_dim).astype(blocks.dtype)
-    out = jax.lax.conv_general_dilated(
-        blocks[None],                                   # NHWC
-        wk[..., None],                                  # HWIO (36 -> 1)
-        window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.float32)
-    return out[0, :, :, 0] + b
+    return score_blocks(blocks, w, b, cfg, use_kernel=(backend != "ref"))
 
 
 # ------------------------------------------------------------------- NMS
@@ -163,6 +205,19 @@ def _nms(boxes: np.ndarray, scores: np.ndarray, iou_thr: float) -> List[int]:
 
 def _round_up(a: int, b: int) -> int:
     return -(-a // b) * b if b > 1 else a
+
+
+@lru_cache(maxsize=256)
+def _resize_weights(src: int, dst: int) -> np.ndarray:
+    """(dst, src) row-weight matrix reproducing jax.image.resize's
+    "linear" kernel (incl. its anti-aliasing taps when downscaling),
+    extracted exactly by resizing the identity. Lets the pyramid
+    resize run as two small matmuls -- same arithmetic as the
+    gather-based resize but in MXU/BLAS form, ~30% faster on the CPU
+    host and one fused op per axis on TPU."""
+    import jax.image
+    eye = jnp.eye(src, dtype=jnp.float32)
+    return np.asarray(jax.image.resize(eye, (dst, src), "linear"))
 
 
 def _frame_hw(shape) -> Tuple[int, int]:
@@ -251,11 +306,22 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
     k = min(cfg.max_detections, n)
     boxes_dev = jnp.asarray(boxes_tab)
 
+    # per-scale resize as two matmuls (exact jax.image.resize weights,
+    # baked as jit constants); the full-res gray is shared, so the
+    # grayscale conversion + pyramid schedule run once per frame and
+    # every scale's resize->stages->score chain hangs off one buffer
+    resize_w = {(sh, sw): (jnp.asarray(_resize_weights(ph, sh)),
+                           jnp.asarray(_resize_weights(pw, sw)))
+                for sh, sw, _ in specs if (sh, sw) != (ph, pw)}
+
     def fn(gray: Array, w: Array, b: Array, hw: Array):
         parts = []
         for sh, sw, _ in specs:
-            g = gray if (sh, sw) == (ph, pw) else \
-                jax.image.resize(gray, (sh, sw), "linear")
+            if (sh, sw) == (ph, pw):
+                g = gray
+            else:
+                wy, wx = resize_w[(sh, sw)]
+                g = (wy @ gray) @ wx.T
             parts.append(score_map(g, w, b, hcfg, cfg.backend).reshape(-1))
         scores = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         # windows must lie inside the TRUE (unpadded) frame and clear
@@ -272,9 +338,39 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
                         tables=DecodeTables(boxes_tab, scale_tab, k))
 
 
+def _prep_frame(frame: Array, h: int, w: int, ph: int, pw: int) -> Array:
+    """In-program frame prep shared by the single and batched programs:
+    grayscale (RGB input only) + edge-pad to the bucket. Runs INSIDE
+    the jit so uint8 stays on the wire, XLA fuses the luma into the
+    gradient stage, and the conversion happens once per frame -- every
+    pyramid scale then resizes the one gray buffer."""
+    g = grayscale(frame) if frame.ndim == 3 else frame.astype(jnp.float32)
+    if (ph, pw) != (h, w):
+        g = jnp.pad(g, ((0, ph - h), (0, pw - w)), mode="edge")
+    return g
+
+
+@lru_cache(maxsize=64)
+def _single_fn(h: int, w: int, ph: int, pw: int,
+               cfg: DetectorConfig) -> "jax.stages.Wrapped":
+    """The per-frame program with grayscale + pad fused in: raw frame
+    (h, w[, 3]) -> (top, idx, keep, n_valid). One jit per (true-shape,
+    bucket) pair; the frame buffer is donated on accelerators (the
+    program owns it -- detect_raw hands over a fresh buffer)."""
+    base = _frame_program(ph, pw, cfg)
+    if base.raw is None:
+        return None
+
+    def fn(frame: Array, wv: Array, bv: Array, hw: Array):
+        return base.raw(_prep_frame(frame, h, w, ph, pw), wv, bv, hw)
+
+    return jax.jit(fn, donate_argnums=(0,) if _donate() else ())
+
+
 @lru_cache(maxsize=64)
 def _batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
-              cfg: DetectorConfig) -> "jax.stages.Wrapped":
+              cfg: DetectorConfig, donate: bool = False
+              ) -> "jax.stages.Wrapped":
     """The per-bucket program vmapped over a stacked frame batch.
 
     One jit per (true-shape, shape-bucket, B) tuple: raw frames
@@ -288,34 +384,97 @@ def _batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
     practice, by the handful of camera geometries a deployment sees);
     mixed-shape batches take the pre-padded host path, which reuses
     the single (bucket, B) program. The batch axis is mapped in `cfg.batch_chunk`-wide
-    vmapped chunks (lax.map): chunk 1 scans frame-by-frame, which keeps
-    each frame's pyramid resident in cache and measures ~10-15% faster
-    than sequential dispatch on the 2-core CPU host; chunk >= B is one
-    fully vectorized vmap step, the layout for wide accelerators.
-    Returns None when the bucket is too small for even one window (same
-    as the single path).
+    vmapped chunks (lax.map): chunk 1 scans frame-by-frame (keeps each
+    frame's pyramid cache-resident on CPU hosts), chunk >= B is one
+    fully vectorized vmap step (wide accelerators); cfg.batch_chunk==0
+    resolves the choice by measurement BEFORE this cache is consulted
+    (_autotune_chunk). `donate` hands the frame-stack buffer to the
+    program on accelerators; the autotune probe passes False so its
+    reused probe buffers stay valid. Returns None when the bucket is
+    too small for even one window (same as the single path).
     """
     base = _frame_program(ph, pw, cfg)
     if base.raw is None:
         return None
 
     def one(frame: Array, wv: Array, bv: Array, hw: Array):
-        g = grayscale(frame) if frame.ndim == 3 else \
-            frame.astype(jnp.float32)
-        if (ph, pw) != (h, w):
-            g = jnp.pad(g, ((0, ph - h), (0, pw - w)), mode="edge")
-        return base.raw(g, wv, bv, hw)
+        return base.raw(_prep_frame(frame, h, w, ph, pw), wv, bv, hw)
 
+    donate_kw = dict(donate_argnums=(0,)) if donate else {}
     chunk = max(1, cfg.batch_chunk)
     if chunk >= batch:
-        return jax.jit(jax.vmap(one, in_axes=(0, None, None, 0)))
+        return jax.jit(jax.vmap(one, in_axes=(0, None, None, 0)),
+                       **donate_kw)
 
     def fn(frames_b: Array, wv: Array, bv: Array, hw_b: Array):
         return jax.lax.map(lambda fh: one(fh[0], wv, bv, fh[1]),
                            (frames_b, hw_b),
                            batch_size=chunk if chunk > 1 else None)
 
-    return jax.jit(fn)
+    return jax.jit(fn, **donate_kw)
+
+
+# ------------------------------------------------- batch-chunk autotune
+# The scan-vs-vmap layout choice used to be a hardcoded CPU/accelerator
+# guess (batch_chunk=1 vs =B). It is now measured: the first
+# detect_batch call on a new (true-shape, bucket, B) tuple probes each
+# candidate schedule on synthetic frames (min-of-k wall time, donation
+# off so the probe buffers survive), caches the winner for the process
+# lifetime, and exposes the decisions through autotune_report() so the
+# bench harness can record them in BENCH_detect.json.
+
+_AUTOTUNE: dict = {}
+_AUTOTUNE_PROBE_ITERS = 3
+
+
+def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
+                    cfg: DetectorConfig, frame_shape: Tuple[int, ...],
+                    frame_dtype) -> int:
+    import time
+    layout = f"{'rgb' if len(frame_shape) == 4 else 'gray'}-{frame_dtype}"
+    key = (h, w, ph, pw, batch, cfg, layout)
+    hit = _AUTOTUNE.get(key)
+    if hit is not None:
+        return hit["chunk"]
+    candidates = sorted({1, batch} | ({4} if 1 < 4 < batch else set()))
+    if len(candidates) == 1:
+        _AUTOTUNE[key] = {"chunk": candidates[0], "probe_ms": {}}
+        return candidates[0]
+    # probe with the CALLER's frame layout (RGB uint8 vs gray f32, ...)
+    # and the production donate flag, so the probe times -- and
+    # pre-compiles -- the exact executable the real call will run,
+    # grayscale conversion included. With donation active each probe
+    # invocation hands over a fresh copy (the copy cost is symmetric
+    # across candidates, so the scan-vs-vmap ranking is unaffected).
+    frames = jnp.zeros(frame_shape, frame_dtype)
+    donate = _donate()
+    mk = (lambda: jnp.array(frames, copy=True)) if donate \
+        else (lambda: frames)
+    wv = jnp.zeros(cfg.hog.n_features, jnp.float32)
+    bv = jnp.float32(0.0)
+    hw_b = jnp.tile(jnp.asarray([h, w], jnp.float32), (batch, 1))
+    probe_ms = {}
+    for c in candidates:
+        fn = _batch_fn(h, w, ph, pw, batch,
+                       dataclasses.replace(cfg, batch_chunk=c), donate)
+        jax.block_until_ready(fn(mk(), wv, bv, hw_b))     # compile
+        best = float("inf")
+        for _ in range(_AUTOTUNE_PROBE_ITERS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(mk(), wv, bv, hw_b))
+            best = min(best, time.perf_counter() - t0)
+        probe_ms[c] = best * 1e3
+    chunk = min(probe_ms, key=probe_ms.get)
+    _AUTOTUNE[key] = {"chunk": chunk, "probe_ms": probe_ms}
+    return chunk
+
+
+def autotune_report() -> dict:
+    """Chosen detect_batch schedules, keyed by the probed geometry and
+    frame layout: {"HxW->PHxPW B=n [rgb-uint8]": {"chunk": c,
+    "probe_ms": {candidate: ms}}}."""
+    return {f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} [{k[6]}]": dict(v)
+            for k, v in _AUTOTUNE.items()}
 
 
 class FrameDetector:
@@ -366,16 +525,24 @@ class FrameDetector:
         Nothing syncs to host here: the result wraps the compiled
         program's top-k/keep tensors plus the static decode tables, and
         decodes lazily on first host access (`.to_list()` et al.).
+        Grayscale + pad run inside the program (one dispatch per frame,
+        keyed on the true shape like the batch path), and the frame
+        buffer is donated on accelerators.
         """
         from repro.api.results import Detections
-        gray = self._to_gray(image)
-        h, w = int(gray.shape[0]), int(gray.shape[1])
+        _frame_hw(np.shape(image))
+        frame = jnp.asarray(image)
+        h, w = int(frame.shape[0]), int(frame.shape[1])
         prog, ph, pw = self.program_for(h, w)
         if prog.fn is None:
             return Detections.empty(prog.tables)
-        top, idx, keep, n_valid = prog.fn(self._pad_to(gray, ph, pw),
-                                          self.svm["w"], self.svm["b"],
-                                          jnp.asarray([h, w], jnp.float32))
+        if _donate() and isinstance(image, jax.Array):
+            # the program donates its frame argument; a caller-owned
+            # device buffer must not be invalidated under them
+            frame = jnp.array(frame, copy=True)
+        fn = _single_fn(h, w, ph, pw, self.cfg)
+        top, idx, keep, n_valid = fn(frame, self.svm["w"], self.svm["b"],
+                                     jnp.asarray([h, w], jnp.float32))
         return Detections(top, idx, keep, n_valid, prog.tables)
 
     def __call__(self, image: Array) -> List[dict]:
@@ -439,12 +606,22 @@ class FrameDetector:
         prog, ph, pw = self.program_for(*hws[0])
         if prog.fn is None:
             return Detections.empty_batch(prog.tables, n)
+        th, tw = (h, w) if uniform else (ph, pw)
         if uniform:
-            fn = _batch_fn(h, w, ph, pw, n, self.cfg)
             frames_b = jnp.asarray(batch)
         else:
-            fn = _batch_fn(ph, pw, ph, pw, n, self.cfg)
             frames_b = jnp.stack([self._pad_to(g, ph, pw) for g in grays])
+        cfg = self.cfg
+        if cfg.batch_chunk == 0:         # autotune scan-vs-vmap (first use)
+            chunk = _autotune_chunk(th, tw, ph, pw, n, cfg,
+                                    tuple(frames_b.shape), frames_b.dtype)
+            cfg = dataclasses.replace(cfg, batch_chunk=chunk)
+        fn = _batch_fn(th, tw, ph, pw, n, cfg, _donate())
+        if _donate() and isinstance(frames, jax.Array):
+            # the batched program donates its frame stack; only copy
+            # when the caller handed us their own device buffer (lists
+            # and numpy stacks already produced a fresh one above)
+            frames_b = jnp.array(frames_b, copy=True)
         hw_b = jnp.asarray(hws, jnp.float32)
         top, idx, keep, n_valid = fn(frames_b, self.svm["w"],
                                      self.svm["b"], hw_b)

@@ -22,7 +22,14 @@ This module is the single definition they all share now (DESIGN.md §3):
               (..., n_features) descriptor,
   * dense  -- a whole scene; the gradient field is trimmed to whole
               cells and the normalized block grid (..., BH, BW, 36) is
-              returned for dense convolution scoring (detector.py).
+              returned for dense matmul scoring (detector.py).
+
+The Pallas backends carry LAYOUT-SPECIFIC kernels: the window kernels
+tile over the batch of small windows, while the dense kernels
+(kernels/dense_grad_hist.py, kernels/dense_block_norm.py,
+fused_hog.dense_fused_hog) tile over row slabs of the scene's cell
+grid, so a whole 4K frame streams through a fixed VMEM budget instead
+of landing in one megablock.
 
 Because block normalization (eq. 5) is window-independent, the two
 layouts agree wherever a window tiles onto the scene's cell grid --
@@ -37,8 +44,9 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.hog import (HOGConfig, PAPER_HOG, _MAG_BIN, block_normalize,
-                            cell_histograms, gradients, grayscale)
+from repro.core.hog import (HOGConfig, PAPER_HOG, _MAG_BIN_FAST,
+                            block_normalize, cell_histograms, gradients,
+                            grayscale)
 
 Array = jax.Array
 
@@ -62,6 +70,13 @@ class StageSet:
     cell_hist: Optional[Callable[[Array, Array, HOGConfig], Array]] = None
     block_norm: Optional[Callable[[Array, HOGConfig], Array]] = None
     fused: Optional[Callable[[Array, HOGConfig], Array]] = None
+    # dense-layout variants: kernels tiled over the SCENE's cell grid
+    # (row slabs) rather than over a batch of window tiles. When absent,
+    # the dense layout falls back to the window-layout stages (correct
+    # for the pure-jnp ref backend, which is shape-agnostic).
+    dense_grad_hist: Optional[Callable[[Array, HOGConfig], Array]] = None
+    dense_block_norm: Optional[Callable[[Array, HOGConfig], Array]] = None
+    dense_fused: Optional[Callable[[Array, HOGConfig], Array]] = None
 
 
 # ---------------------------------------------------------------- backends
@@ -86,7 +101,10 @@ def _cast_feat(blocks: Array, cfg: HOGConfig) -> Array:
 
 def _ref_grad_mag_bin(gray: Array, cfg: HOGConfig) -> Tuple[Array, Array]:
     fx, fy = gradients(gray)
-    return _MAG_BIN[cfg.mode](fx, fy, cfg.bins)
+    # _MAG_BIN_FAST == _MAG_BIN except "ref", whose arctan2 binning is
+    # replaced by the bit-compatible sector predicate (hog.py) -- the
+    # arctan2 form was ~half the dense hot path's runtime on CPU
+    return _MAG_BIN_FAST[cfg.mode](fx, fy, cfg.bins)
 
 
 def _ref_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
@@ -123,12 +141,36 @@ def _pallas_fused(gray: Array, cfg: HOGConfig) -> Array:
                       cfg)
 
 
+def _pallas_dense_grad_hist(gray: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.dense_grad_hist import dense_grad_hist
+    return dense_grad_hist(gray, cell=cfg.cell, bins=cfg.bins,
+                           mode=_kernel_mode(cfg))
+
+
+def _pallas_dense_block_norm(hist: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.dense_block_norm import dense_block_norm
+    out = dense_block_norm(hist, block=cfg.block, eps=cfg.eps,
+                           mode=("nr" if _use_nr(cfg) else "rsqrt"))
+    return _cast_feat(out, cfg)
+
+
+def _pallas_dense_fused(gray: Array, cfg: HOGConfig) -> Array:
+    from repro.kernels.fused_hog import dense_fused_hog
+    out = dense_fused_hog(gray, cell=cfg.cell, block=cfg.block,
+                          bins=cfg.bins, eps=cfg.eps,
+                          mode=_kernel_mode(cfg))
+    return _cast_feat(out, cfg)
+
+
 BACKENDS = {
     "ref": StageSet("ref", _ref_grad_mag_bin, _ref_cell_hist,
                     _ref_block_norm),
     "kernel": StageSet("kernel", _pallas_grad_mag_bin, _pallas_cell_hist,
-                       _pallas_block_norm),
-    "fused": StageSet("fused", fused=_pallas_fused),
+                       _pallas_block_norm,
+                       dense_grad_hist=_pallas_dense_grad_hist,
+                       dense_block_norm=_pallas_dense_block_norm),
+    "fused": StageSet("fused", fused=_pallas_fused,
+                      dense_fused=_pallas_dense_fused),
 }
 
 
@@ -143,15 +185,27 @@ def get_backend(backend: str) -> StageSet:
 
 # ------------------------------------------------------------- stage chain
 
-def run_stages(gray: Array, geom: HOGConfig, backend: str = "ref") -> Array:
+def run_stages(gray: Array, geom: HOGConfig, backend: str = "ref",
+               layout: str = "window") -> Array:
     """Run the canonical chain on prepared gray tiles.
 
     gray: (B, geom.window_h', geom.window_w') f32 where the interior
     (shape - 2) is a whole number of cells; `geom` is the geometry-
     adjusted config (see `window_blocks` / `dense_blocks`).
     Returns the normalized block grid (B, bh, bw, block_dim).
+
+    `layout="dense"` selects the backend's dense-grid kernels (tiled
+    over the scene's cell rows) when it has them; backends without
+    dense variants (ref, whose pure-jnp stages are shape-agnostic)
+    run the window-layout stages on the scene directly.
     """
     ss = get_backend(backend)
+    if layout == "dense":
+        if ss.dense_fused is not None:
+            return ss.dense_fused(gray, geom)
+        if ss.dense_grad_hist is not None:
+            hist = ss.dense_grad_hist(gray, geom)
+            return ss.dense_block_norm(hist, geom)
     if ss.fused is not None:
         return ss.fused(gray, geom)
     mag, b = ss.grad_mag_bin(gray, geom)
@@ -232,4 +286,4 @@ def dense_blocks(image: Array, cfg: HOGConfig = PAPER_HOG,
     gray = gray[..., : gh + 2, : gw + 2]
     geom = dataclasses.replace(cfg, window_h=gh + 2, window_w=gw + 2)
     flat, unflatten = _flatten_batch(gray)
-    return unflatten(run_stages(flat, geom, backend))
+    return unflatten(run_stages(flat, geom, backend, layout="dense"))

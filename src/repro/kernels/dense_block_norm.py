@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: DENSE block L2 normalization (eq. 5, whole scene).
+
+Input : hist (B, ch, cw, bins) f32 -- the scene's cell-histogram grid
+Output: blocks (B, bh, bw, block^2*bins) f32, L2-normalized
+
+Dense companion of block_norm.py: instead of one megablock holding the
+whole scene's cell grid, the kernel tiles over ROW SLABS of the BLOCK
+grid (`row_blocks` block rows per program). A block row r reads cell
+rows r..r+block-1, so -- as in dense_grad_hist.py -- the wrapper passes
+`block` vertically shifted views of the histogram buffer instead of
+overlapping BlockSpecs; slab i of view j holds cell rows i*TR+j ..
+i*TR+j+TR-1, exactly the j-th cell row of every block in the slab.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.block_norm import _nr_rsqrt
+
+
+def _kernel(*refs, block: int, eps: float, mode: str):
+    views, out_ref = refs[:-1], refs[-1]
+    bw = out_ref.shape[-2]
+    parts = []
+    for i in range(block):                        # cell-row offset
+        h = views[i][...]                         # (1, TR, cw, bins)
+        for j in range(block):                    # cell-col offset
+            parts.append(h[:, :, j:j + bw, :])
+    v = jnp.concatenate(parts, axis=-1)           # (1, TR, bw, bd)
+    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
+    inv = _nr_rsqrt(ss) if mode == "nr" else jax.lax.rsqrt(ss)
+    out_ref[...] = v * inv
+
+
+@partial(jax.jit, static_argnames=("block", "eps", "mode", "row_blocks",
+                                   "interpret"))
+def dense_block_norm(hist: jax.Array, block: int = 2, eps: float = 1e-2,
+                     mode: str = "rsqrt", row_blocks: int = 16,
+                     interpret: bool = INTERPRET) -> jax.Array:
+    """(B, ch, cw, bins) f32 -> (B, bh, bw, block^2*bins) f32."""
+    B, ch, cw, bins = hist.shape
+    bh, bw = ch - block + 1, cw - block + 1
+    bd = block * block * bins
+    tr = min(row_blocks, bh)
+    s = cdiv(bh, tr)
+    # pad cell rows so every shifted view tiles into s full slabs; the
+    # zero rows only feed block rows >= bh, sliced off below (the zero
+    # vectors normalize to zero -- eps^2 keeps the rsqrt finite)
+    chp = s * tr + block - 1
+    if chp != ch:
+        hist = jnp.pad(hist, ((0, 0), (0, chp - ch), (0, 0), (0, 0)))
+    views = [hist[:, j:j + s * tr] for j in range(block)]
+    out = pl.pallas_call(
+        partial(_kernel, block=block, eps=eps, mode=mode),
+        grid=(B, s),
+        in_specs=[pl.BlockSpec((1, tr, cw, bins),
+                               lambda b, i: (b, i, 0, 0))] * block,
+        out_specs=pl.BlockSpec((1, tr, bw, bd), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, s * tr, bw, bd), jnp.float32),
+        interpret=interpret,
+    )(*views)
+    return out[:, :bh]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: DENSE gradient -> mag/bin -> cell histograms.
+
+Input : gray scene (B, H, W) f32, H = gh + 2 with gh a whole number of
+        cells (the dense-layout trim, core/stages.py)
+Output: hist (B, ch, cw, bins) f32 -- the whole scene's cell grid
+
+The window kernels (hog_gradient.py + cell_hist.py) tile over a BATCH
+of small windows: one VMEM block per window slab, geometry sized for
+130x66 tiles. Pushing a dense 640x480 scene through them lands the
+whole frame in a single megablock -- no grid, no pipelining, and a
+VMEM ceiling on scene size. This kernel instead tiles the chain over
+ROW SLABS of the scene's CELL GRID (`row_cells` cell rows = 8*row_cells
+pixel rows per program), the dense analogue of how the paper's FPGA
+streams rows through BUFFER_GRADIENT: each slab's gradients, bins and
+cell histograms live entirely in VMEM and the grid pipelines slabs
+against the HBM loads.
+
+Halo: the central-difference gradient at interior row r reads gray rows
+r-1..r+1. Pallas block index maps address whole blocks, so instead of
+overlapping BlockSpecs the wrapper passes THREE vertically shifted
+views of the gray buffer (rows 0.., 1.., 2..); slab i of each view
+lines up so the kernel sees its one-row halo for free.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import INTERPRET, cdiv
+from repro.kernels.hog_gradient import _mag_bin_cordic, _mag_bin_sector
+
+
+def _kernel(up_ref, mid_ref, dn_ref, hist_ref, *, cell: int, bins: int,
+            mode: str):
+    up = up_ref[...]                              # rows r-1   (1, R, W)
+    mid = mid_ref[...]                            # rows r
+    dn = dn_ref[...]                              # rows r+1
+    fx = mid[:, :, 2:] - mid[:, :, :-2]           # eq. (1)
+    fy = dn[:, :, 1:-1] - up[:, :, 1:-1]          # eq. (2)
+    tb, rr, gw = fx.shape
+    gw = gw // cell * cell                        # trim ragged right edge
+    fx, fy = fx[:, :, :gw], fy[:, :, :gw]
+    if mode == "sector":
+        mag, b = _mag_bin_sector(fx, fy)
+    else:
+        mag, b = _mag_bin_cordic(fx, fy)
+    tr, cw = rr // cell, gw // cell
+    m = mag.reshape(tb, tr, cell, cw, cell)
+    bi = b.reshape(tb, tr, cell, cw, cell)
+    acc = jnp.zeros((tb, tr, cw, bins), jnp.float32)
+    for k in range(bins):                         # bins is static (9)
+        acc = acc.at[..., k].set(
+            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(2, 4)))
+    hist_ref[...] = acc
+
+
+@partial(jax.jit, static_argnames=("cell", "bins", "mode", "row_cells",
+                                   "interpret"))
+def dense_grad_hist(gray: jax.Array, cell: int = 8, bins: int = 9,
+                    mode: str = "sector", row_cells: int = 8,
+                    interpret: bool = INTERPRET) -> jax.Array:
+    """(B, H, W) f32 dense scene -> (B, ch, cw, bins) cell histograms."""
+    B, H, W = gray.shape
+    gh = (H - 2) // cell * cell
+    ch, cw = gh // cell, (W - 2) // cell
+    tr = min(row_cells, ch)
+    s = cdiv(ch, tr)
+    # pad rows so the slab grid tiles exactly; the padded rows only feed
+    # cell rows >= ch, which are sliced off below
+    hp = s * tr * cell + 2
+    if hp != H:
+        gray = jnp.pad(gray, ((0, 0), (0, max(0, hp - H)), (0, 0)))
+    rows = tr * cell
+    out = pl.pallas_call(
+        partial(_kernel, cell=cell, bins=bins, mode=mode),
+        grid=(B, s),
+        in_specs=[pl.BlockSpec((1, rows, W), lambda b, i: (b, i, 0))] * 3,
+        out_specs=pl.BlockSpec((1, tr, cw, bins), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, s * tr, cw, bins), jnp.float32),
+        interpret=interpret,
+    )(gray[:, 0:hp - 2, :], gray[:, 1:hp - 1, :], gray[:, 2:hp, :])
+    return out[:, :ch]

@@ -23,6 +23,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import INTERPRET, cdiv
@@ -83,3 +84,75 @@ def fused_hog(gray: jax.Array, cell: int = 8, block: int = 2, bins: int = 9,
         out_shape=jax.ShapeDtypeStruct((B, nf), jnp.float32),
         interpret=interpret,
     )(gray)
+
+
+# ------------------------------------------------------------ dense grid
+# The window kernel above fuses the chain for a BATCH of 130x66 tiles.
+# The dense variant fuses the same chain for a WHOLE SCENE, tiled over
+# row slabs of the scene's block grid so arbitrarily tall frames stream
+# through a fixed VMEM budget (the dense analogue of the paper's
+# BUFFER_HOG_PRENORM row streaming). A slab of `row_blocks` block rows
+# needs `row_blocks + block - 1` cell rows of histogram, i.e. a
+# one-cell-row recompute overlap between neighboring slabs -- the
+# wrapper hands each program its overlapping gray rows through a
+# host-side clamped gather (one XLA gather, ~15% duplicated rows),
+# which keeps the BlockSpecs plain and non-overlapping.
+
+def _dense_kernel(slab_ref, out_ref, *, cell: int, block: int, bins: int,
+                  eps: float, mode: str):
+    g = slab_ref[0, 0]                                   # (K, W)
+    fx = g[1:-1, 2:] - g[1:-1, :-2]
+    fy = g[2:, 1:-1] - g[:-2, 1:-1]
+    rr, gw = fx.shape
+    gw = gw // cell * cell
+    fx, fy = fx[:, :gw], fy[:, :gw]
+    if mode == "sector":
+        mag, b = _mag_bin_sector(fx, fy)
+    else:
+        mag, b = _mag_bin_cordic(fx, fy)
+
+    cr, cw = rr // cell, gw // cell                      # tr+block-1 cell rows
+    m = mag.reshape(cr, cell, cw, cell)
+    bi = b.reshape(cr, cell, cw, cell)
+    hist = jnp.zeros((cr, cw, bins), jnp.float32)
+    for k in range(bins):
+        hist = hist.at[..., k].set(
+            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(1, 3)))
+
+    tr, bw = cr - block + 1, cw - block + 1
+    parts = [hist[i:i + tr, j:j + bw, :]
+             for i in range(block) for j in range(block)]
+    v = jnp.concatenate(parts, axis=-1)                  # (tr, bw, bd)
+    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
+    inv = _nr_rsqrt(ss) if mode == "cordic" else jax.lax.rsqrt(ss)
+    out_ref[...] = (v * inv)[None]
+
+
+@partial(jax.jit, static_argnames=("cell", "block", "bins", "eps", "mode",
+                                   "row_blocks", "interpret"))
+def dense_fused_hog(gray: jax.Array, cell: int = 8, block: int = 2,
+                    bins: int = 9, eps: float = 1e-2, mode: str = "sector",
+                    row_blocks: int = 8,
+                    interpret: bool = INTERPRET) -> jax.Array:
+    """(B, H, W) f32 dense scene -> (B, bh, bw, block^2*bins) f32."""
+    B, H, W = gray.shape
+    gh = (H - 2) // cell * cell
+    ch, cw = gh // cell, (W - 2) // cell
+    bh, bw = ch - block + 1, cw - block + 1
+    bd = block * block * bins
+    tr = min(row_blocks, bh)
+    s = cdiv(bh, tr)
+    k = (tr + block - 1) * cell + 2          # gray rows each slab reads
+    starts = np.arange(s) * tr * cell
+    idx = np.minimum(starts[:, None] + np.arange(k)[None, :], H - 1)
+    slabs = gray[:, idx, :]                  # (B, s, K, W) clamped gather
+    out = pl.pallas_call(
+        partial(_dense_kernel, cell=cell, block=block, bins=bins, eps=eps,
+                mode=mode),
+        grid=(B, s),
+        in_specs=[pl.BlockSpec((1, 1, k, W), lambda b, i: (b, i, 0, 0))],
+        out_specs=pl.BlockSpec((1, tr, bw, bd), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, s * tr, bw, bd), jnp.float32),
+        interpret=interpret,
+    )(slabs)
+    return out[:, :bh]

@@ -59,3 +59,50 @@ def svm_scores(feats: jax.Array, w: jax.Array, bias: jax.Array,
         interpret=interpret,
     )(feats, wp.reshape(Fp, 1))
     return out[:B, 0] + bias
+
+
+# ---------------------------------------------------------- dense scoring
+# The dense detector scores every window position at cell stride; the
+# 15x7x36 "conv" over the scene's block grid factors into ONE matmul
+# (P block positions x 36) @ (36 x 105 window offsets) followed by 105
+# cheap shifted adds (core/detector.py:score_blocks). This kernel is the
+# matmul half on the MXU, grid over M tiles with the full (K, N) weight
+# tile resident -- K=36, N=105 pad to one (40, 128) sublane/lane tile.
+
+
+def _score_kernel(x_ref, w_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def score_matmul(flat: jax.Array, wt: jax.Array, block_m: int = 512,
+                 interpret: bool = INTERPRET) -> jax.Array:
+    """(M, K) block rows @ (K, N) per-offset weights -> (M, N) f32.
+
+    Accepts f32 or bf16 inputs (the perf preset's bf16 descriptors);
+    accumulation is always f32 (`preferred_element_type`).
+    """
+    M, K = flat.shape
+    K2, N = wt.shape
+    assert K == K2, (flat.shape, wt.shape)
+    Mp = round_up(M, 8)
+    Kp = round_up(K, 8)
+    Np = round_up(N, LANE)
+    tm = min(block_m, Mp)
+    Mp = round_up(Mp, tm)
+    flat = jnp.pad(flat, ((0, Mp - M), (0, Kp - K)))
+    wt = jnp.pad(wt, ((0, Kp - K), (0, Np - N)))
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(cdiv(Mp, tm),),
+        in_specs=[
+            pl.BlockSpec((tm, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((Kp, Np), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(flat, wt)
+    return out[:M, :N]

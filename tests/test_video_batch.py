@@ -97,14 +97,21 @@ def test_detect_batch_edge_cases():
 
 
 def test_detect_batch_compiles_once_per_bucket_batch_pair():
-    cfg = DetectorConfig(score_threshold=-10.0, scales=(1.0,))
+    # explicit schedule: batch_chunk=0 (the default) would resolve via
+    # the autotune probe first, so the cache key under test would be the
+    # resolved config, not this one
+    cfg = DetectorConfig(score_threshold=-10.0, scales=(1.0,),
+                         batch_chunk=1)
     det = FrameDetector(SVM, cfg)
     frames = _frames(3)
     r1 = det.detect_batch(frames)
     r2 = det.detect_batch(_frames(3))
     assert r1 and len(r2) == 3
+    # donate must be passed the way detect_batch_raw passes it
+    # (positionally): lru_cache keys f(x) and f(x, default) differently
+    from repro.core.detector import _donate
     fn = _batch_fn(160, 128, _round_up(160, cfg.shape_bucket),
-                   _round_up(128, cfg.shape_bucket), 3, cfg)
+                   _round_up(128, cfg.shape_bucket), 3, cfg, _donate())
     assert fn._cache_size() == 1          # one trace, two batches
     # stacked-array input reuses the same program
     det.detect_batch(np.stack(_frames(3)))
