@@ -21,8 +21,18 @@ substrates as well).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import sys
 import time
+
+if "--sharded" in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    # the sharded section needs multiple devices; forcing host devices
+    # must happen BEFORE jax first initializes (the same trick
+    # launch/dryrun.py uses). An operator-provided XLA_FLAGS wins.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -111,8 +121,12 @@ def run(fast: bool = False):
     det = run_detect(fast=fast)
     breakdown = run_stage_breakdown(fast=fast)
     ses = run_session_overhead(fast=fast)
+    # the sharded section only means something with >1 device (use
+    # --sharded to self-force 8 host devices before jax init)
+    shd = run_sharded(fast=fast) if jax.device_count() > 1 else None
     return {"speedup": t_sw / t_scene, "detect": det,
-            "stage_breakdown": breakdown, "session_overhead": ses}
+            "stage_breakdown": breakdown, "session_overhead": ses,
+            "sharded": shd}
 
 
 # ----------------------------------------------------------- batched video
@@ -466,6 +480,111 @@ def run_check(tolerance: float = 0.15, fast: bool = True) -> int:
     return 0 if verdict == "PASS" else 1
 
 
+# --------------------------------------------------------- sharded batch
+# Multi-device data parallelism over detect_batch: the frame batch laid
+# over the 'data' mesh axis, B/n_devices frames per device, vs the same
+# batch on one device. Run under forced host devices
+# (`--sharded` self-forces XLA_FLAGS=--xla_force_host_platform_device_count=8
+# before jax init) this measures dispatch/SPMD overhead, not speedup --
+# forced host devices share one CPU; on real multi-chip hosts the same
+# section measures the actual scaling. Doubles as the CI correctness
+# smoke: sharded results must stay byte-identical to single-device for
+# divisible AND non-divisible batch sizes, and every autotune entry must
+# carry its mesh dimension.
+
+def run_sharded(fast: bool = False) -> dict:
+    from repro.core.detector import _resolve_dp  # resolved device count
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        # a 1-device "sharded" run would compare the unsharded path to
+        # itself and report a vacuous PASS -- fail loudly instead (the
+        # --sharded flag self-forces 8 host devices, so landing here
+        # means an operator-set XLA_FLAGS pinned the count to 1)
+        print(f"sharded/FAIL,needs >= 2 devices, found {n_dev} "
+              f"(--sharded forces XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8)")
+        return {"ok": False, "n_devices": n_dev}
+    rng = np.random.default_rng(0)
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32)) * .01,
+           "b": jnp.float32(0.0)}
+    h, w = (240, 320) if fast else (480, 640)
+    scales = (1.0, 0.8, 0.64)
+    dp = n_dev
+    B = 2 * dp
+    frames = np.stack([rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+                       for _ in range(B)])
+    single = FrameDetector(svm, DetectorConfig(
+        scales=scales, batch_chunk=0, data_parallel=1))
+    shard = FrameDetector(svm, DetectorConfig(
+        scales=scales, batch_chunk=0, data_parallel=0))
+    assert _resolve_dp(shard.cfg) == dp
+
+    print(f"# sharded detect_batch -- {w}x{h} B={B} over {dp} device(s)")
+    # correctness first: byte-identical to the single-device path, for a
+    # divisible batch and a non-divisible one (exercises pad-and-mask).
+    # The gate pins the SAME explicit schedule on both sides (chunk=1):
+    # letting each side autotune independently would conflate sharding
+    # equivalence with scan-vs-vmap schedule numerics (only guaranteed
+    # to 1e-5 across schedules) and could flake the CI lane.
+    single_pin = FrameDetector(svm, DetectorConfig(
+        scales=scales, batch_chunk=1, data_parallel=1))
+    shard_pin = FrameDetector(svm, DetectorConfig(
+        scales=scales, batch_chunk=1, data_parallel=0))
+    want = single_pin.detect_batch(frames)
+    identical = shard_pin.detect_batch(frames) == want
+    nd = B - 1
+    identical_nd = (shard_pin.detect_batch(frames[:nd])
+                    == single_pin.detect_batch(frames[:nd]))
+    # the autotuned pair is what the timing below runs; probing it here
+    # also populates the mesh-tagged schedule entries for the BENCH row
+    single.detect_batch_raw(frames).block_until_ready()
+    shard.detect_batch_raw(frames).block_until_ready()
+    rep = autotune_report()
+    mesh_tagged = bool(rep) and all("mesh=data:" in k for k in rep)
+    print(f"sharded/identical_divisible,{identical},B={B}")
+    print(f"sharded/identical_nondivisible,{identical_nd},B={nd}")
+    print(f"sharded/autotune_mesh_tagged,{mesh_tagged},"
+          f"{len(rep)} schedule entries")
+
+    # paired min-of-k timing (same protocol as run_detect_batch)
+    rounds = 3 if fast else 7
+    t_single, t_shard = np.inf, np.inf
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        single.detect_batch_raw(frames).block_until_ready()
+        t_single = min(t_single, (time.perf_counter() - t0) / B)
+        t0 = time.perf_counter()
+        shard.detect_batch_raw(frames).block_until_ready()
+        t_shard = min(t_shard, (time.perf_counter() - t0) / B)
+    row = {
+        "host": "cpu-forced",
+        "n_devices": n_dev,
+        "data_parallel": dp,
+        "frame": f"{w}x{h}",
+        "B": B,
+        "single_ms_per_frame": t_single * 1e3,
+        "sharded_ms_per_frame": t_shard * 1e3,
+        "speedup_sharded_vs_single": t_single / t_shard,
+        "identical_divisible": bool(identical),
+        "identical_nondivisible": bool(identical_nd),
+        "schedule": {k: v for k, v in rep.items()
+                     if f"mesh=data:{dp}" in k},
+    }
+    print(f"sharded/{w}x{h}_B{B}_single_ms,{t_single*1e3:.1f},per frame")
+    print(f"sharded/{w}x{h}_B{B}_sharded_ms,{t_shard*1e3:.1f},"
+          f"per frame over {dp} device(s)")
+    print(f"sharded/{w}x{h}_B{B}_speedup,{t_single/t_shard:.3f},"
+          f"forced host devices share one CPU -- overhead bound, "
+          f"not scaling")
+    _update_bench(sharded=row)
+    ok = identical and identical_nd and mesh_tagged
+    print(f"sharded/{'PASS' if ok else 'FAIL'},byte-identical + "
+          f"mesh-tagged autotune")
+    row["ok"] = bool(ok)
+    return row
+
+
 # ------------------------------------------------------ session overhead
 # The api facade (repro.api.DetectionSession) must be free: same frame,
 # same compiled program, once through the raw FrameDetector legacy call
@@ -537,11 +656,19 @@ if __name__ == "__main__":
                     help="CI gate: fail if dense 640x480 ms/frame "
                          "regressed vs the committed pr4 baseline "
                          "(never writes BENCH_detect.json)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="measure + record the multi-device sharded "
+                         "section (forces 8 host devices via XLA_FLAGS "
+                         "unless already set); exits 1 when sharded "
+                         "results are not byte-identical to the "
+                         "single-device path")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="--check: allowed regression fraction "
                          "(default 0.15 = 15%%)")
     a = ap.parse_args()
-    if a.check:
+    if a.sharded:
+        sys.exit(0 if run_sharded(fast=a.fast)["ok"] else 1)
+    elif a.check:
         sys.exit(run_check(tolerance=a.tolerance, fast=a.fast))
     elif a.session_only:
         run_session_overhead(fast=a.fast)

@@ -20,6 +20,12 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
                           accumulation) and autotuned batch scheduling
                           (batch_chunk=0: scan-vs-vmap probed per
                           (bucket, B) at first use)
+    presets("sharded")    every visible device on the batch axis
+                          (detector.data_parallel=0 resolves to
+                          jax.device_count() at first use): detect_batch
+                          / stream / serve shard B/n_devices frames per
+                          chip over the 'data' mesh, autotuned per-device
+                          schedule -- the multi-device serving default
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -155,6 +161,14 @@ def _register_builtin() -> None:
         name="perf", hog=hog_svm.PERF,
         detector=DetectorConfig(hog=hog_svm.PERF, score_threshold=0.5,
                                 backend="fused", batch_chunk=0),
+        train=hog_svm.TRAIN))
+    # sharded: the paper numerics on every visible device -- the frame
+    # batch rides the 'data' mesh axis (core/detector.py sharded path),
+    # with the per-device scan-vs-vmap schedule autotuned at first use
+    register_preset("sharded", PipelineConfig(
+        name="sharded", hog=hog_svm.CONFIG,
+        detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5,
+                                data_parallel=0, batch_chunk=0),
         train=hog_svm.TRAIN))
 
 

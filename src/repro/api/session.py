@@ -36,7 +36,7 @@ import numpy as np
 from repro.api.config import PipelineConfig, presets
 from repro.api.results import Detections
 from repro.core.detector import (FrameDetector, _batch_fn, _frame_program,
-                                 _single_fn)
+                                 _sharded_batch_fn, _single_fn)
 from repro.core.hog import hog_descriptor
 from repro.core.svm import SVMParams, train_svm
 from repro.core.video import Tracker
@@ -119,9 +119,17 @@ class DetectionSession:
 
     def detect_batch(self, frames) -> Detections:
         """Stacked (B, H, W[, 3]) array or frame list -> one batched
-        Detections; same one-bucket-per-call contract as the detector."""
+        Detections; same one-bucket-per-call contract as the detector.
+        With `config.detector.data_parallel != 1` the batch runs
+        sharded, B/n_devices frames per device (pad-and-mask for
+        non-divisible B; results byte-identical to single-device)."""
         self._stats["batches"] += 1
         return self.detector.detect_batch_raw(frames)
+
+    @property
+    def data_devices(self) -> int:
+        """Devices the batch axis resolves to (1 = unsharded)."""
+        return self.detector.data_devices
 
     def stream(self, frames, batch_size: int = 8,
                tracker: Optional[Tracker] = None) -> List[Detections]:
@@ -171,7 +179,11 @@ class DetectionSession:
         """Compile ahead of traffic. `shapes` mixes (h, w) single-frame
         and (B, h, w) batched entries; each compiles (and runs on a
         zero frame) exactly the program live traffic of that shape
-        would hit. Returns cache_stats()."""
+        would hit -- under `detector.data_parallel != 1` a (B, h, w)
+        entry compiles the SHARDED per-bucket program (including the
+        pad-and-mask variant when B does not divide the mesh), so a
+        serving deployment warms the same multi-device executables its
+        microbatcher will dispatch. Returns cache_stats()."""
         for s in shapes:
             s = tuple(int(v) for v in s)
             if len(s) == 2:
@@ -192,13 +204,22 @@ class DetectionSession:
         fi = _frame_program.cache_info()
         si = _single_fn.cache_info()
         bi = _batch_fn.cache_info()
+        shi = _sharded_batch_fn.cache_info()
+        try:
+            devices = self.detector.data_devices
+        except ValueError:        # config names more devices than exist
+            devices = None
         return {
             "frame_programs": {"hits": fi.hits + si.hits,
                                "misses": fi.misses + si.misses,
                                "size": fi.currsize + si.currsize,
                                "maxsize": fi.maxsize + si.maxsize},
-            "batch_programs": {"hits": bi.hits, "misses": bi.misses,
-                               "size": bi.currsize, "maxsize": bi.maxsize},
+            "batch_programs": {"hits": bi.hits + shi.hits,
+                               "misses": bi.misses + shi.misses,
+                               "size": bi.currsize + shi.currsize,
+                               "maxsize": bi.maxsize + shi.maxsize},
+            "mesh": {"data_parallel": self.config.detector.data_parallel,
+                     "devices": devices},
             "warmed": sorted(self._warm),
             "calls": dict(self._stats),
         }
@@ -209,4 +230,5 @@ class DetectionSession:
         _frame_program.cache_clear()
         _single_fn.cache_clear()
         _batch_fn.cache_clear()
+        _sharded_batch_fn.cache_clear()
         self._warm.clear()

@@ -37,6 +37,19 @@ accelerators). Frames in a batch may differ in true size as long as
 they share a padded bucket (the per-frame (h, w) mask rides along the
 batch axis). This is the hot path the video/tracking layer
 (core/video.py) and the serving microbatcher (serve/engine.py) sit on.
+
+The SHARDED path layers multi-device data parallelism on top of the
+batched one: with `cfg.data_parallel != 1` the frame batch is laid over
+the 'data' axis of a 1-D device mesh (launch/mesh.py:make_detection_mesh)
+and the per-bucket program runs under shard_map -- each device executes
+the same scan-vs-vmap schedule on its local B/n_devices sub-batch, with
+pyramid, scoring, top-k and NMS all device-local (no cross-device
+collectives, no host round-trips). Batches that do not divide the mesh
+are padded with zero frames whose true-size mask is (0, 0), so every
+window of a pad frame fails the inside-frame test and decodes to an
+empty result; the pad rows are sliced off before the Detections is
+built. Per-frame results are byte-identical to the single-device path
+(tests/test_sharded.py pins this per backend/numerics mode).
 """
 from __future__ import annotations
 
@@ -47,7 +60,9 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.hog import HOGConfig, PAPER_HOG, grayscale
 from repro.core.stages import dense_blocks
 from repro.core.svm import SVMParams
@@ -84,7 +99,16 @@ class DetectorConfig:
     #   probe scan-vs-vmap per (bucket, B) at first use (min-of-k on
     #   synthetic frames) and cache the winner -- see autotune_report().
     #   1 = scan the batch frame-by-frame (best locality on CPU hosts);
-    #   >= B = one fully vectorized vmap step (wide accelerators)
+    #   >= B = one fully vectorized vmap step (wide accelerators).
+    #   Under data_parallel != 1 the chunk applies to each device's
+    #   LOCAL sub-batch.
+    data_parallel: int = 1                # devices on the batch axis:
+    #   1 = single-device (the pre-sharding path, bit-for-bit),
+    #   0 = every visible device, n > 1 = exactly n devices (ValueError
+    #   when the host has fewer). detect_batch pads B up to a multiple
+    #   of the mesh size with masked-out zero frames and runs the
+    #   per-bucket program under shard_map over the 'data' mesh axis
+    #   (launch/mesh.py:make_detection_mesh) -- see DESIGN.md §10.
 
 
 def scene_blocks(gray: Array, cfg: HOGConfig,
@@ -401,16 +425,97 @@ def _batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
         return base.raw(_prep_frame(frame, h, w, ph, pw), wv, bv, hw)
 
     donate_kw = dict(donate_argnums=(0,)) if donate else {}
-    chunk = max(1, cfg.batch_chunk)
+    return jax.jit(_chunked_schedule(one, max(1, cfg.batch_chunk), batch),
+                   **donate_kw)
+
+
+def _chunked_schedule(one: Callable, chunk: int, batch: int) -> Callable:
+    """The scan-vs-vmap batch schedule shared by the single-device
+    program and each device of the sharded one: chunk >= batch is one
+    wide vmap, otherwise a lax.map scan of chunk-wide vmapped steps
+    (chunk 1 = plain frame-by-frame scan). ONE definition on purpose:
+    the sharded path's byte-identity with the single-device path rests
+    on both running exactly this schedule."""
     if chunk >= batch:
-        return jax.jit(jax.vmap(one, in_axes=(0, None, None, 0)),
-                       **donate_kw)
+        return jax.vmap(one, in_axes=(0, None, None, 0))
 
     def fn(frames_b: Array, wv: Array, bv: Array, hw_b: Array):
         return jax.lax.map(lambda fh: one(fh[0], wv, bv, fh[1]),
                            (frames_b, hw_b),
                            batch_size=chunk if chunk > 1 else None)
 
+    return fn
+
+
+# ------------------------------------------------- sharded batch program
+
+@lru_cache(maxsize=8)
+def _detection_mesh(dp: int):
+    """The 1-D 'data' mesh sharded programs run over, built once per
+    device count (Mesh construction touches jax device state, so it is
+    deferred to first sharded call and cached)."""
+    from repro.launch.mesh import make_detection_mesh
+    return make_detection_mesh(dp)
+
+
+def _resolve_dp(cfg: DetectorConfig) -> int:
+    """Resolve cfg.data_parallel to a concrete device count.
+
+    1 stays 1 without initializing the backend (the single-device path
+    must not pay a device query); 0 means every visible device; an
+    explicit n > jax.device_count() is a config error, reported with
+    the same clear message as the mesh builders."""
+    dp = cfg.data_parallel
+    if dp == 1:
+        return 1
+    n = jax.device_count()
+    if dp == 0:
+        return n
+    if not 1 <= dp <= n:
+        raise ValueError(
+            f"DetectorConfig.data_parallel={dp}: the host has {n} "
+            f"visible device(s) (jax.devices()); use 0 (= all) or a "
+            f"value in [1, {n}]")
+    return dp
+
+
+@lru_cache(maxsize=64)
+def _sharded_batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
+                      dp: int, cfg: DetectorConfig, donate: bool = False
+                      ) -> "jax.stages.Wrapped":
+    """The per-bucket program sharded over the 'data' mesh axis.
+
+    `batch` is the PADDED global batch (a multiple of `dp`; the caller
+    pads with zero frames masked out via hw = (0, 0)). Each device runs
+    the same chunked scan-vs-vmap schedule `_batch_fn` would run, on
+    its local batch/dp sub-batch -- shard_map with data-sharded frames
+    and hw mask, replicated SVM params, and data-sharded outputs. No
+    collective touches the hot path: frames are independent, so the
+    program is embarrassingly parallel and per-frame results stay
+    byte-identical to the single-device path. One jit per (true-shape,
+    bucket, B, dp) tuple. Returns None when the bucket is too small for
+    even one window (same as the single/batched paths).
+    """
+    base = _frame_program(ph, pw, cfg)
+    if base.raw is None:
+        return None
+    assert batch % dp == 0, (batch, dp)
+    local = batch // dp
+    mesh = _detection_mesh(dp)
+
+    def one(frame: Array, wv: Array, bv: Array, hw: Array):
+        return base.raw(_prep_frame(frame, h, w, ph, pw), wv, bv, hw)
+
+    local_fn = _chunked_schedule(one, max(1, cfg.batch_chunk), local)
+    data = P("data")
+    # check_vma=False: pallas_call (kernel/fused backends) has no
+    # replication rule, and the program is embarrassingly parallel --
+    # no collectives for the checker to validate anyway
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(data, P(), P(), data),
+                   out_specs=(data, data, data, data),
+                   check_vma=False)
+    donate_kw = dict(donate_argnums=(0,)) if donate else {}
     return jax.jit(fn, **donate_kw)
 
 
@@ -429,14 +534,16 @@ _AUTOTUNE_PROBE_ITERS = 3
 
 def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
                     cfg: DetectorConfig, frame_shape: Tuple[int, ...],
-                    frame_dtype) -> int:
+                    frame_dtype, dp: int = 1) -> int:
     import time
     layout = f"{'rgb' if len(frame_shape) == 4 else 'gray'}-{frame_dtype}"
-    key = (h, w, ph, pw, batch, cfg, layout)
+    key = (h, w, ph, pw, batch, cfg, layout, dp)
     hit = _AUTOTUNE.get(key)
     if hit is not None:
         return hit["chunk"]
-    candidates = sorted({1, batch} | ({4} if 1 < 4 < batch else set()))
+    # under sharding the chunk schedules each device's LOCAL sub-batch
+    local = batch // dp
+    candidates = sorted({1, local} | ({4} if 1 < 4 < local else set()))
     if len(candidates) == 1:
         _AUTOTUNE[key] = {"chunk": candidates[0], "probe_ms": {}}
         return candidates[0]
@@ -455,8 +562,10 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
     hw_b = jnp.tile(jnp.asarray([h, w], jnp.float32), (batch, 1))
     probe_ms = {}
     for c in candidates:
-        fn = _batch_fn(h, w, ph, pw, batch,
-                       dataclasses.replace(cfg, batch_chunk=c), donate)
+        c_cfg = dataclasses.replace(cfg, batch_chunk=c)
+        fn = (_sharded_batch_fn(h, w, ph, pw, batch, dp, c_cfg, donate)
+              if dp > 1 else
+              _batch_fn(h, w, ph, pw, batch, c_cfg, donate))
         jax.block_until_ready(fn(mk(), wv, bv, hw_b))     # compile
         best = float("inf")
         for _ in range(_AUTOTUNE_PROBE_ITERS):
@@ -470,10 +579,13 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
 
 
 def autotune_report() -> dict:
-    """Chosen detect_batch schedules, keyed by the probed geometry and
-    frame layout: {"HxW->PHxPW B=n [rgb-uint8]": {"chunk": c,
-    "probe_ms": {candidate: ms}}}."""
-    return {f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} [{k[6]}]": dict(v)
+    """Chosen detect_batch schedules, keyed by the probed geometry,
+    mesh and frame layout: {"HxW->PHxPW B=n mesh=data:d [rgb-uint8]":
+    {"chunk": c, "probe_ms": {candidate: ms}}}. Every key carries the
+    mesh dimension (data:1 = the unsharded path) so BENCH entries stay
+    unambiguous about which device layout a schedule was probed on."""
+    return {f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} mesh=data:{k[7]} "
+            f"[{k[6]}]": dict(v)
             for k, v in _AUTOTUNE.items()}
 
 
@@ -485,14 +597,22 @@ class FrameDetector:
     retrace; only the final box decode touches host numpy.
     """
 
-    def __init__(self, svm: SVMParams, cfg: DetectorConfig = DetectorConfig()):
+    def __init__(self, svm: SVMParams, cfg: Optional[DetectorConfig] = None):
+        # default built per instance (never a shared default-arg object)
         self.svm = svm
-        self.cfg = cfg
+        self.cfg = DetectorConfig() if cfg is None else cfg
 
     def program_for(self, h: int, w: int) -> Tuple[FrameProgram, int, int]:
         b = max(1, self.cfg.shape_bucket)
         return _frame_program(_round_up(h, b), _round_up(w, b),
                               self.cfg), _round_up(h, b), _round_up(w, b)
+
+    @property
+    def data_devices(self) -> int:
+        """Resolved device count of the batch ('data') axis: 1 on the
+        single-device path, the mesh size under sharding. The serving
+        microbatcher scales its coalescing target by this."""
+        return _resolve_dp(self.cfg)
 
     @staticmethod
     def _to_gray(image: Array) -> Array:
@@ -561,7 +681,10 @@ class FrameDetector:
         compiled program is the single-frame pyramid program vmapped
         over the batch, jitted once per (bucket, B) pair; per-frame
         top-k + NMS run device-side and the host never syncs until the
-        result is decoded.
+        result is decoded. With `cfg.data_parallel != 1` the batch is
+        padded to a multiple of the data mesh size (masked zero frames,
+        sliced off the result) and runs sharded, B/n_devices frames per
+        device -- per-frame results byte-identical to data_parallel=1.
         """
         from repro.api.results import Detections
         if isinstance(frames, (list, tuple)) and not frames:
@@ -612,19 +735,37 @@ class FrameDetector:
         else:
             frames_b = jnp.stack([self._pad_to(g, ph, pw) for g in grays])
         cfg = self.cfg
+        dp = _resolve_dp(cfg)
+        n_pad = _round_up(n, dp) if dp > 1 else n
+        if n_pad != n:
+            # pad the batch up to the mesh's data size with zero frames
+            # whose true-size mask is (0, 0): every window fails the
+            # inside-frame test, so pad rows decode to empty results
+            # and are sliced off below before the Detections is built
+            pad = jnp.zeros((n_pad - n,) + tuple(frames_b.shape[1:]),
+                            frames_b.dtype)
+            frames_b = jnp.concatenate([frames_b, pad])
+            hws = list(hws) + [(0, 0)] * (n_pad - n)
         if cfg.batch_chunk == 0:         # autotune scan-vs-vmap (first use)
-            chunk = _autotune_chunk(th, tw, ph, pw, n, cfg,
-                                    tuple(frames_b.shape), frames_b.dtype)
+            chunk = _autotune_chunk(th, tw, ph, pw, n_pad, cfg,
+                                    tuple(frames_b.shape), frames_b.dtype,
+                                    dp)
             cfg = dataclasses.replace(cfg, batch_chunk=chunk)
-        fn = _batch_fn(th, tw, ph, pw, n, cfg, _donate())
-        if _donate() and isinstance(frames, jax.Array):
+        fn = (_sharded_batch_fn(th, tw, ph, pw, n_pad, dp, cfg, _donate())
+              if dp > 1 else
+              _batch_fn(th, tw, ph, pw, n_pad, cfg, _donate()))
+        if _donate() and n_pad == n and isinstance(frames, jax.Array):
             # the batched program donates its frame stack; only copy
-            # when the caller handed us their own device buffer (lists
-            # and numpy stacks already produced a fresh one above)
+            # when the caller handed us their own device buffer (lists,
+            # numpy stacks and the pad concatenate above all produced a
+            # fresh one already)
             frames_b = jnp.array(frames_b, copy=True)
         hw_b = jnp.asarray(hws, jnp.float32)
         top, idx, keep, n_valid = fn(frames_b, self.svm["w"],
                                      self.svm["b"], hw_b)
+        if n_pad != n:                   # drop the masked pad rows
+            top, idx, keep, n_valid = (top[:n], idx[:n], keep[:n],
+                                       n_valid[:n])
         return Detections(top, idx, keep, n_valid, prog.tables)
 
     def detect_batch(self, frames) -> List[List[dict]]:
@@ -634,7 +775,7 @@ class FrameDetector:
 
 
 def detect(image_rgb: Array, svm: SVMParams,
-           cfg: DetectorConfig = DetectorConfig()) -> List[dict]:
+           cfg: Optional[DetectorConfig] = None) -> List[dict]:
     """Multi-scale detection. Returns [{box:(y0,x0,y1,x1), score, scale}]
     sorted by descending score (top-k order).
 

@@ -81,8 +81,13 @@ class Track:
 class Tracker:
     """IoU-greedy multi-object tracker over per-frame detections."""
 
-    def __init__(self, cfg: TrackerConfig = TrackerConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[TrackerConfig] = None):
+        # the default config is constructed PER INSTANCE: a
+        # `cfg=TrackerConfig()` default argument would be one shared
+        # object across every Tracker in the process (and TrackerConfig
+        # is kept frozen so thresholds cannot be mutated out from under
+        # a running tracker either way)
+        self.cfg = TrackerConfig() if cfg is None else cfg
         self.tracks: List[Track] = []
         self._next_id = 0
 
@@ -168,11 +173,13 @@ class VideoDetector:
     """
 
     def __init__(self, svm: SVMParams,
-                 cfg: DetectorConfig = DetectorConfig(),
-                 tracker: TrackerConfig = TrackerConfig()):
+                 cfg: Optional[DetectorConfig] = None,
+                 tracker: Optional[TrackerConfig] = None):
         # deferred import: repro.api sits on top of this module
         from repro.api.config import PipelineConfig
         from repro.api.session import DetectionSession
+        cfg = DetectorConfig() if cfg is None else cfg
+        tracker = TrackerConfig() if tracker is None else tracker
         self.session = DetectionSession(
             svm, PipelineConfig(hog=cfg.hog, detector=cfg, tracker=tracker))
         self.tracker = Tracker(tracker)

@@ -2,6 +2,10 @@
 never touches jax device state -- required because the dry-run forces 512
 host devices via XLA_FLAGS before any jax init, while tests/benches must
 see a single CPU device.
+
+`make_detection_mesh` is the detection-side default: the sharded
+detect_batch path (core/detector.py) lays its frame batch over the
+1-D 'data' axis of this mesh, one B/n_devices sub-batch per chip.
 """
 from __future__ import annotations
 
@@ -25,6 +29,31 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_host_mesh(model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())
+    if not 1 <= model <= n:
+        # without this guard, model > n makes data = n // model == 0 and
+        # the reshape below dies with an opaque numpy size-mismatch error
+        raise ValueError(
+            f"make_host_mesh(model={model}): the host has {n} visible "
+            f"device(s) (jax.devices()); 'model' must be in [1, {n}]")
     data = n // model
     devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
     return Mesh(devs, ("data", "model"))
+
+
+def make_detection_mesh(data_parallel: int = 0) -> Mesh:
+    """1-D 'data' mesh for sharded detection -- the detection default.
+
+    `data_parallel=0` takes every visible device (the host-mesh data
+    axis with model=1); `n > 0` takes exactly the first n devices and
+    raises a clear ValueError when the host has fewer. The sharded
+    detect_batch program (core/detector.py:_sharded_batch_fn) shards
+    its frame batch over this mesh's 'data' axis.
+    """
+    n = len(jax.devices())
+    data = n if data_parallel == 0 else int(data_parallel)
+    if not 1 <= data <= n:
+        raise ValueError(
+            f"make_detection_mesh(data_parallel={data_parallel}): the "
+            f"host has {n} visible device(s) (jax.devices()); "
+            f"data_parallel must be 0 (= all) or in [1, {n}]")
+    return Mesh(np.asarray(jax.devices()[:data]), ("data",))

@@ -17,13 +17,19 @@ program per frame-shape bucket, with per-frame latency/box stats -- the
 "camera -> detection block" stream the paper sketches in §VI.
 
 Frame requests MICROBATCH: requests whose frames land in the same shape
-bucket coalesce (up to `frame_batch`, waiting at most `max_wait_ms` for
-stragglers) into one batched device step (`FrameDetector.detect_batch`);
-requests for other buckets are set aside and served in arrival order on
-the next rounds. The bounded frame queue is the backpressure valve:
-`submit_frame` raises `ServiceOverloaded` instead of queueing unbounded
-work, and a malformed frame is answered with an error result without
-poisoning the batch it arrived in.
+bucket coalesce (up to `frame_batch * n_devices` -- the detector's data
+mesh multiplies the per-dispatch target -- waiting at most `max_wait_ms`
+for stragglers) into one batched device step
+(`FrameDetector.detect_batch`); requests for other buckets are set
+aside and served in arrival order on the next rounds. The bounded frame
+queue is the backpressure valve: `submit_frame` raises
+`ServiceOverloaded` instead of queueing unbounded work, and a malformed
+frame is answered with an error result without poisoning the batch it
+arrived in. Futures can never hang: an unexpected worker exception
+drains the pending backlog with an error payload carrying the traceback
+(`worker_error` keeps it for inspection), and `stop()` with a backlog
+answers every accepted-but-unserved request with an error instead of
+leaving submitters blocked in `fut.get()`.
 
 `generate` -- LM serving: prefill + greedy/temperature decode loop with
 the layer-stacked KV cache. Used by examples and the serve benchmarks.
@@ -35,6 +41,7 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -114,19 +121,63 @@ class DetectionService:
         self._detector = frame_detector if frame_detector is not None \
             else FrameDetector(svm, detector if detector is not None
                                else DetectorConfig(hog=cfg, backend=path))
+        # the detector's data mesh multiplies the per-dispatch frame
+        # target: one batched step can feed frame_batch frames to each
+        # of the detector's devices
+        self.devices = max(1, getattr(self._detector, "data_devices", 1))
+        self.frame_target = self.frame_batch * self.devices
+        self.worker_error: Optional[str] = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0,
                       "frames": 0, "frame_ms": 0.0, "frame_boxes": 0,
                       "frame_batches": 0, "frame_occupancy": 0.0,
-                      "frame_rejects": 0}
+                      "frame_rejects": 0, "devices": self.devices,
+                      "device_frames": [0] * self.devices,
+                      "per_device_occupancy": [0.0] * self.devices}
 
     def start(self):
         self._thread.start()
         return self
 
     def stop(self):
+        """Stop the worker; a backlog is answered with errors, never
+        left hanging in `fut.get()`."""
         self._stop = True
-        self._thread.join(timeout=5)
+        self._work.set()                  # wake an idle worker at once
+        if self._thread.ident is not None:
+            self._thread.join(timeout=5)
+        # requests still pending (worker never started, died, or the
+        # join timed out mid-batch) would otherwise hang their clients
+        self._drain_pending("DetectionService stopped with a backlog")
+
+    def _drain_pending(self, msg: str) -> int:
+        """Answer every queued/parked request with an error payload;
+        returns how many were drained. Called on stop() and after an
+        unexpected worker exception -- the no-hanging-futures rule."""
+        n = 0
+        while True:
+            try:
+                # popleft-or-IndexError IS the emptiness check: stop()
+                # and the worker's exit drain can run concurrently, so
+                # a check-then-pop would race (deque ops are atomic)
+                req = self._frame_backlog.popleft()
+            except IndexError:
+                try:
+                    req = self.frame_q.get_nowait()
+                except queue.Empty:
+                    break
+            self._answer_frame(req, {"detections": [], "ms": 0.0,
+                                     "error": msg})
+            n += 1
+        while True:
+            try:
+                r = self.q.get_nowait()
+            except queue.Empty:
+                break
+            r.future.put({"score": float("nan"), "human": -1,
+                          "error": msg})
+            n += 1
+        return n
 
     # ------------------------------------------------------- window path
     def submit(self, window: np.ndarray) -> "queue.Queue":
@@ -195,17 +246,36 @@ class DetectionService:
 
     # ------------------------------------------------------------ worker
     def _loop(self):
-        while not self._stop:
-            served = self._serve_frame_batch()
-            served = self._serve_window_batch() or served
-            if not served:
-                # idle: block on the wake event (no busy-poll). Clear
-                # first, then re-check the queues so a submit racing the
-                # clear re-sets the event and the wait returns at once.
-                self._work.clear()
-                if self.q.empty() and self.frame_q.empty() \
-                        and not self._frame_backlog:
-                    self._work.wait(timeout=0.1)
+        try:
+            while not self._stop:
+                try:
+                    served = self._serve_frame_batch()
+                    served = self._serve_window_batch() or served
+                except Exception:
+                    # a bug escaping the per-request containment used to
+                    # kill the worker silently and leave every submitter
+                    # blocked in fut.get() forever; instead: keep the
+                    # traceback, fail the pending backlog, keep serving
+                    self.worker_error = traceback.format_exc()
+                    served = self._drain_pending(
+                        "DetectionService worker error (see "
+                        ".worker_error):\n" + self.worker_error) > 0
+                if not served:
+                    # idle: block on the wake event (no busy-poll). Clear
+                    # first, then re-check the queues so a submit racing
+                    # the clear re-sets the event and the wait returns at
+                    # once.
+                    self._work.clear()
+                    if self.q.empty() and self.frame_q.empty() \
+                            and not self._frame_backlog:
+                        self._work.wait(timeout=0.1)
+        finally:
+            # worker exiting (stop() or a fatal error): nobody will ever
+            # answer what is still queued -- fail it now, don't hang
+            self._drain_pending(
+                "DetectionService worker exited"
+                + (f"; worker_error:\n{self.worker_error}"
+                   if self.worker_error else ""))
 
     def _next_frame_req(self) -> Optional[FrameRequest]:
         if self._frame_backlog:
@@ -219,7 +289,8 @@ class DetectionService:
         """Coalesce same-bucket frame requests into one batched step.
 
         The first request pins the shape bucket; further requests are
-        drained from the backlog/queue until `frame_batch` frames are
+        drained from the backlog/queue until `frame_target` frames
+        (`frame_batch` per device of the detector's data mesh) are
         gathered or `max_wait` expires. Mismatched buckets park in the
         backlog (served, in order, on later rounds); malformed frames
         are answered with an error result immediately and never join
@@ -237,7 +308,7 @@ class DetectionService:
         group: List[FrameRequest] = [req]
         parked: List[FrameRequest] = []
         deadline = time.monotonic() + self.max_wait
-        while len(group) < self.frame_batch:
+        while len(group) < self.frame_target:
             nxt = None
             if self._frame_backlog:
                 nxt = self._frame_backlog.popleft()
@@ -286,6 +357,7 @@ class DetectionService:
                     dets_per.append(e)
         ms = (time.perf_counter() - t0) * 1e3 / len(group)
         self.stats["frame_batches"] += 1
+        self._account_device_frames(len(group))
         for r, dets in zip(group, dets_per):
             if isinstance(dets, Exception):
                 self._answer_frame(
@@ -301,8 +373,24 @@ class DetectionService:
                                    "saturated": saturated})
         self.stats["frame_occupancy"] = (
             self.stats["frames"]
-            / (self.stats["frame_batches"] * self.frame_batch))
+            / (self.stats["frame_batches"] * self.frame_target))
+        self.stats["per_device_occupancy"] = [
+            df / (self.stats["frame_batches"] * self.frame_batch)
+            for df in self.stats["device_frames"]]
         return True
+
+    def _account_device_frames(self, g: int) -> None:
+        """Attribute one dispatched group of g frames to the devices
+        that ran it: the sharded batch program pads g up to the mesh
+        size and lays contiguous rows per device, a single-frame
+        dispatch runs on device 0. Feeds per_device_occupancy."""
+        df = self.stats["device_frames"]
+        if g == 1 or self.devices == 1:
+            df[0] += g
+            return
+        local = -(-g // self.devices)      # rows per device, post-pad
+        for i in range(self.devices):
+            df[i] += min(local, max(0, g - i * local))
 
     def _serve_window_batch(self) -> bool:
         reqs: List[DetectionRequest] = []

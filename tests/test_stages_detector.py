@@ -318,7 +318,9 @@ def test_batch_chunk_autotune_resolves_and_matches():
     auto = FrameDetector(svm, DetectorConfig(
         score_threshold=-10.0, scales=(1.0,), batch_chunk=0))
     got = auto.detect_batch(frames)
-    key = "160x128->160x128 B=3 [rgb-uint8]"
+    # every schedule entry is tagged with its mesh layout (data:1 = the
+    # unsharded path) so BENCH entries stay unambiguous about devices
+    key = "160x128->160x128 B=3 mesh=data:1 [rgb-uint8]"
     rep = autotune_report()
     assert key in rep and rep[key]["chunk"] in (1, 3)
     assert set(rep[key]["probe_ms"]) == {1, 3}
