@@ -26,13 +26,17 @@ import pathlib
 import sys
 import time
 
-if "--sharded" in sys.argv and "xla_force_host_platform_device_count" \
+if ("--sharded" in sys.argv or "--uhd" in sys.argv) \
+        and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
-    # the sharded section needs multiple devices; forcing host devices
-    # must happen BEFORE jax first initializes (the same trick
+    # the sharded/uhd sections need multiple devices; forcing host
+    # devices must happen BEFORE jax first initializes (the same trick
     # launch/dryrun.py uses). An operator-provided XLA_FLAGS wins.
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=8")
+# probe the batch schedules live: a stale disk-cached autotune decision
+# would make the recorded probe_ms tables lies about THIS run
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "")
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +75,31 @@ def _time(fn, *args, iters=20, warmup=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters
+
+
+def _dist_ms(samples_s) -> dict:
+    """min/p50/p99 over per-iteration wall-time samples, in ms. Min
+    stays the headline for SPEEDUP ratios (least host noise); p50/p99
+    are the latency-SLO view -- a path whose min looks fine but whose
+    p99 grew is a regression min-of-k cannot see."""
+    ts = np.asarray(sorted(samples_s), np.float64)
+    return {"min_ms": float(ts[0] * 1e3),
+            "p50_ms": float(np.percentile(ts, 50) * 1e3),
+            "p99_ms": float(np.percentile(ts, 99) * 1e3),
+            "samples": int(len(ts))}
+
+
+def _time_dist(fn, iters=10, warmup=2) -> dict:
+    """Per-iteration timing distribution of a nullary fn (fn must block
+    on its own result)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return _dist_ms(samples)
 
 
 def run(fast: bool = False):
@@ -156,17 +185,18 @@ def run_detect_batch(fast: bool = False) -> dict:
         # reproducible (reps stretches small-B rounds to B*reps >= 16
         # frames per sample)
         reps = max(1, 16 // B)
-        t_seq, t_bat = np.inf, np.inf
+        seq_s, bat_s = [], []
         for _ in range(rounds):
             t0 = time.perf_counter()
             for _ in range(reps):
                 for f in frames[:B]:
                     det(f)
-            t_seq = min(t_seq, (time.perf_counter() - t0) / (B * reps))
+            seq_s.append((time.perf_counter() - t0) / (B * reps))
             t0 = time.perf_counter()
             for _ in range(reps):
                 det.detect_batch(frames[:B])
-            t_bat = min(t_bat, (time.perf_counter() - t0) / (B * reps))
+            bat_s.append((time.perf_counter() - t0) / (B * reps))
+        t_seq, t_bat = min(seq_s), min(bat_s)
         results[f"B{B}"] = {
             "batch": B,
             "seq_ms_per_frame": t_seq * 1e3,
@@ -174,6 +204,8 @@ def run_detect_batch(fast: bool = False) -> dict:
             "batch_ms_per_frame": t_bat * 1e3,
             "batch_fps": 1.0 / t_bat,
             "speedup_batch_vs_seq": t_seq / t_bat,
+            "seq_dist": _dist_ms(seq_s),
+            "batch_dist": _dist_ms(bat_s),
         }
         print(f"detect_batch/{w}x{h}_B{B}_seq_fps,{1/t_seq:.2f},"
               f"{t_seq*1e3:.1f} ms/frame")
@@ -244,10 +276,12 @@ def run_detect(fast: bool = False) -> dict:
 
         det(frame)                                   # compile warmup
         iters = 3 if fast else 5
-        t0 = time.perf_counter()
+        dense_s = []
         for _ in range(iters):
+            t0 = time.perf_counter()
             det(frame)
-        t_dense = (time.perf_counter() - t0) / iters
+            dense_s.append(time.perf_counter() - t0)
+        t_dense = float(np.mean(dense_s))            # mean, as before
 
         t0 = time.perf_counter()
         _per_window_recompute(frame_padded, svm, prog.per_scale)  # + compile
@@ -260,6 +294,7 @@ def run_detect(fast: bool = False) -> dict:
         results[key] = {
             "n_windows": int(n_windows),
             "dense_ms_per_frame": t_dense * 1e3,
+            "dense_dist": _dist_ms(dense_s),
             "dense_windows_per_s": n_windows / t_dense,
             "per_window_ms_per_frame": t_base * 1e3,
             "per_window_windows_per_s": n_windows / t_base,
@@ -549,14 +584,15 @@ def run_sharded(fast: bool = False) -> dict:
 
     # paired min-of-k timing (same protocol as run_detect_batch)
     rounds = 3 if fast else 7
-    t_single, t_shard = np.inf, np.inf
+    single_s, shard_s = [], []
     for _ in range(rounds):
         t0 = time.perf_counter()
         single.detect_batch_raw(frames).block_until_ready()
-        t_single = min(t_single, (time.perf_counter() - t0) / B)
+        single_s.append((time.perf_counter() - t0) / B)
         t0 = time.perf_counter()
         shard.detect_batch_raw(frames).block_until_ready()
-        t_shard = min(t_shard, (time.perf_counter() - t0) / B)
+        shard_s.append((time.perf_counter() - t0) / B)
+    t_single, t_shard = min(single_s), min(shard_s)
     row = {
         "host": "cpu-forced",
         "n_devices": n_dev,
@@ -565,6 +601,8 @@ def run_sharded(fast: bool = False) -> dict:
         "B": B,
         "single_ms_per_frame": t_single * 1e3,
         "sharded_ms_per_frame": t_shard * 1e3,
+        "single_dist": _dist_ms(single_s),
+        "sharded_dist": _dist_ms(shard_s),
         "speedup_sharded_vs_single": t_single / t_shard,
         "identical_divisible": bool(identical),
         "identical_nondivisible": bool(identical_nd),
@@ -582,6 +620,122 @@ def run_sharded(fast: bool = False) -> dict:
     print(f"sharded/{'PASS' if ok else 'FAIL'},byte-identical + "
           f"mesh-tagged autotune")
     row["ok"] = bool(ok)
+    return row
+
+
+# ------------------------------------------------------------ UHD tiled
+# Single-frame 3840x2160 latency: the untiled program on one device vs
+# the intra-frame tiled path (row-slab and scale-group) with every
+# forced host device on the 'tile' mesh axis. Forced host devices share
+# one CPU, so the tiled speedup here comes from the work the tiled
+# path's banded pyramid resize removes (O(taps) per pixel vs the dense
+# matmul's O(src)) -- the decomposition itself is overhead-bound on this
+# host and becomes real scaling on multi-chip hosts, exactly as in the
+# sharded section. Doubles as the CI identity smoke at full UHD: tiled
+# must stay box-identical to untiled per resize mode (exit 1 otherwise).
+
+def run_uhd(fast: bool = False) -> dict:
+    from repro.core.detector import _resolve_fp
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print(f"uhd/FAIL,needs >= 2 devices, found {n_dev} "
+              f"(--uhd forces XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8)")
+        return {"ok": False, "n_devices": n_dev}
+    rng = np.random.default_rng(0)
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32)) * .01,
+           "b": jnp.float32(0.0)}
+    h, w = 2160, 3840
+    frame = rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+    base = dict(scales=(1.0, 0.8, 0.64), score_threshold=0.5)
+    single = FrameDetector(svm, DetectorConfig(**base))
+    single_banded = FrameDetector(svm, DetectorConfig(
+        **base, pyramid_resize="banded"))
+    tiled = FrameDetector(svm, DetectorConfig(
+        **base, pyramid_resize="banded", frame_parallel=0,
+        tile_mode="slab"))
+    tiled_scale = FrameDetector(svm, DetectorConfig(
+        **base, pyramid_resize="banded", frame_parallel=0,
+        tile_mode="scale"))
+    tiled_mm = FrameDetector(svm, DetectorConfig(
+        **base, frame_parallel=0, tile_mode="slab"))
+    fp = _resolve_fp(tiled.cfg)
+    prog = tiled.program_for(h, w)[0]
+    print(f"# uhd single-frame -- {w}x{h}, untiled vs {fp}-tile "
+          f"intra-frame parallel ({prog.n_positions} windows, "
+          f"k={prog.k})")
+
+    # identity gates: tiled vs untiled within each resize mode (both
+    # modes are self-consistent; comparing across modes would conflate
+    # tiling with resize accumulation-order numerics)
+    want_banded = single_banded(frame)
+    ident_slab = tiled(frame) == want_banded
+    ident_scale = tiled_scale(frame) == want_banded
+    ident_mm = tiled_mm(frame) == single(frame)
+    print(f"uhd/identical_slab,{ident_slab},banded resize, {fp} tiles")
+    print(f"uhd/identical_scale,{ident_scale},banded resize, {fp} tiles")
+    print(f"uhd/identical_matmul,{ident_mm},matmul resize, {fp} tiles")
+
+    iters = 3 if fast else 7
+
+    def bench(det):
+        return _time_dist(
+            lambda: det.detect_raw(frame).block_until_ready(),
+            iters=iters, warmup=1)
+
+    d_single = bench(single)
+    d_single_banded = bench(single_banded)
+    d_tiled = bench(tiled)
+    d_tiled_scale = bench(tiled_scale)
+    # headline: untiled default vs the best tile mode ON THIS HOST. The
+    # forced mesh shares one core, so slab's halo overlap (~40% extra
+    # HOG rows across 8 tiles) is paid serially here; scale groups have
+    # no halo. On genuinely parallel devices slab balances better --
+    # both modes are recorded so either claim stays auditable.
+    best_ms = min(d_tiled["min_ms"], d_tiled_scale["min_ms"])
+    best_mode = ("slab" if d_tiled["min_ms"] <= d_tiled_scale["min_ms"]
+                 else "scale")
+    speedup = d_single["min_ms"] / best_ms
+    row = {
+        "host": "cpu-forced",
+        "n_devices": n_dev,
+        "frame_parallel": fp,
+        "frame": f"{w}x{h}",
+        "n_windows": int(prog.n_positions),
+        "k": int(prog.k),
+        "single_ms": d_single["min_ms"],
+        "single_dist": d_single,
+        "single_banded_ms": d_single_banded["min_ms"],
+        "single_banded_dist": d_single_banded,
+        "tiled_slab_ms": d_tiled["min_ms"],
+        "tiled_slab_dist": d_tiled,
+        "tiled_scale_ms": d_tiled_scale["min_ms"],
+        "tiled_scale_dist": d_tiled_scale,
+        "speedup_tiled_vs_single": speedup,
+        "speedup_tile_mode": best_mode,
+        "identical_slab": bool(ident_slab),
+        "identical_scale": bool(ident_scale),
+        "identical_matmul": bool(ident_mm),
+    }
+    print(f"uhd/{w}x{h}_single_ms,{d_single['min_ms']:.1f},"
+          f"p50 {d_single['p50_ms']:.1f} p99 {d_single['p99_ms']:.1f}")
+    print(f"uhd/{w}x{h}_single_banded_ms,{d_single_banded['min_ms']:.1f},"
+          f"p50 {d_single_banded['p50_ms']:.1f} "
+          f"p99 {d_single_banded['p99_ms']:.1f}")
+    print(f"uhd/{w}x{h}_tiled_slab_ms,{d_tiled['min_ms']:.1f},"
+          f"p50 {d_tiled['p50_ms']:.1f} p99 {d_tiled['p99_ms']:.1f} "
+          f"over {fp} tiles")
+    print(f"uhd/{w}x{h}_tiled_scale_ms,{d_tiled_scale['min_ms']:.1f},"
+          f"p50 {d_tiled_scale['p50_ms']:.1f} "
+          f"p99 {d_tiled_scale['p99_ms']:.1f}")
+    print(f"uhd/{w}x{h}_speedup,{speedup:.2f},tiled(banded {best_mode}) "
+          f"vs untiled default -- acceptance >= 1.5")
+    _update_bench(uhd=row)
+    ok = bool(ident_slab and ident_scale and ident_mm and speedup >= 1.5)
+    print(f"uhd/{'PASS' if ok else 'FAIL'},box-identical per resize mode "
+          f"and >= 1.5x tiled speedup")
+    row["ok"] = ok
     return row
 
 
@@ -662,11 +816,19 @@ if __name__ == "__main__":
                          "unless already set); exits 1 when sharded "
                          "results are not byte-identical to the "
                          "single-device path")
+    ap.add_argument("--uhd", action="store_true",
+                    help="measure + record the 3840x2160 intra-frame "
+                         "tiled section (forces 8 host devices via "
+                         "XLA_FLAGS unless already set); exits 1 when "
+                         "tiled results are not box-identical to the "
+                         "untiled path")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="--check: allowed regression fraction "
                          "(default 0.15 = 15%%)")
     a = ap.parse_args()
-    if a.sharded:
+    if a.uhd:
+        sys.exit(0 if run_uhd(fast=a.fast)["ok"] else 1)
+    elif a.sharded:
         sys.exit(0 if run_sharded(fast=a.fast)["ok"] else 1)
     elif a.check:
         sys.exit(run_check(tolerance=a.tolerance, fast=a.fast))

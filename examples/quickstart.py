@@ -15,7 +15,13 @@ The same session serves every other path too:
     session.serve().start()         # micro-batching DetectionService
 
 and `presets("paper" | "faithful" | "perf")` swaps the whole numerics /
-precision / serving tree in one argument (see DESIGN.md §8).
+precision / serving tree in one argument (see DESIGN.md §8). For big
+frames, `presets("uhd")` adds intra-frame parallelism: the pyramid is
+tiled over every spare device (`detector.frame_parallel`), with the
+banded O(taps) pyramid resize and an overlap-exact merge + NMS, so a
+3840x2160 frame's latency drops while staying box-identical to the
+untiled path (DESIGN.md §11); frames below `frame_parallel_min_area`
+keep routing to the untiled program.
 
 Usage:  PYTHONPATH=src python examples/quickstart.py [--fast]
 """
@@ -80,6 +86,8 @@ def main():
     if not dets:
         print("      (no detections above threshold)")
     if result.saturated:
+        # with max_detections=0 (the default) K scales with the window
+        # grid, so this only fires on an explicit, too-small override
         print("      (top-k saturated: raise detector.max_detections)")
 
 

@@ -26,6 +26,12 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
                           / stream / serve shard B/n_devices frames per
                           chip over the 'data' mesh, autotuned per-device
                           schedule -- the multi-device serving default
+    presets("uhd")        intra-frame parallelism for big frames:
+                          frames >= 1280x720 split their pyramid over
+                          every visible device (detector.frame_parallel=0,
+                          row-slab tiles, banded resize) with an exact
+                          top-k merge -- single-frame UHD latency path,
+                          box-identical to untiled (DESIGN.md §11)
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -169,6 +175,19 @@ def _register_builtin() -> None:
         name="sharded", hog=hog_svm.CONFIG,
         detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5,
                                 data_parallel=0, batch_chunk=0),
+        train=hog_svm.TRAIN))
+    # uhd: single-frame latency on big frames -- every visible device
+    # tiles ONE frame's pyramid (frame_parallel=0, row-slab mode) with
+    # the banded O(taps)-per-pixel resize; frames below 1280x720 keep
+    # the untiled program. max_detections=0 scales top-k with the
+    # window grid so 4K frames don't saturate. See DESIGN.md §11.
+    register_preset("uhd", PipelineConfig(
+        name="uhd", hog=hog_svm.CONFIG,
+        detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5,
+                                frame_parallel=0, tile_mode="slab",
+                                pyramid_resize="banded",
+                                frame_parallel_min_area=1280 * 720,
+                                batch_chunk=0),
         train=hog_svm.TRAIN))
 
 

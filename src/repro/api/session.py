@@ -36,7 +36,9 @@ import numpy as np
 from repro.api.config import PipelineConfig, presets
 from repro.api.results import Detections
 from repro.core.detector import (FrameDetector, _batch_fn, _frame_program,
-                                 _sharded_batch_fn, _single_fn)
+                                 _sharded_batch_fn, _single_fn,
+                                 _tile_local_fn, _tiled_batch_fn,
+                                 _tiled_single_fn)
 from repro.core.hog import hog_descriptor
 from repro.core.svm import SVMParams, train_svm
 from repro.core.video import Tracker
@@ -200,26 +202,47 @@ class DetectionSession:
 
     def cache_stats(self) -> Dict:
         """Hit/miss/size counters of the process-wide compiled-program
-        caches plus this session's call and warmup bookkeeping."""
+        caches plus this session's call and warmup bookkeeping. The
+        "autotune" section reports how the batch-schedule decisions were
+        sourced -- in-memory hit, disk-cache restore, or a live probe --
+        plus the resolved cache path (core/autotune_cache.py)."""
+        from repro.core import autotune_cache
         fi = _frame_program.cache_info()
         si = _single_fn.cache_info()
+        tli = _tile_local_fn.cache_info()
+        ti = _tiled_single_fn.cache_info()
         bi = _batch_fn.cache_info()
         shi = _sharded_batch_fn.cache_info()
+        tbi = _tiled_batch_fn.cache_info()
         try:
             devices = self.detector.data_devices
         except ValueError:        # config names more devices than exist
             devices = None
+        try:
+            tiles = self.detector.frame_devices
+        except ValueError:
+            tiles = None
         return {
-            "frame_programs": {"hits": fi.hits + si.hits,
-                               "misses": fi.misses + si.misses,
-                               "size": fi.currsize + si.currsize,
-                               "maxsize": fi.maxsize + si.maxsize},
-            "batch_programs": {"hits": bi.hits + shi.hits,
-                               "misses": bi.misses + shi.misses,
-                               "size": bi.currsize + shi.currsize,
-                               "maxsize": bi.maxsize + shi.maxsize},
+            "frame_programs": {"hits": fi.hits + si.hits + ti.hits
+                               + tli.hits,
+                               "misses": fi.misses + si.misses + ti.misses
+                               + tli.misses,
+                               "size": fi.currsize + si.currsize
+                               + ti.currsize + tli.currsize,
+                               "maxsize": fi.maxsize + si.maxsize
+                               + ti.maxsize + tli.maxsize},
+            "batch_programs": {"hits": bi.hits + shi.hits + tbi.hits,
+                               "misses": bi.misses + shi.misses
+                               + tbi.misses,
+                               "size": bi.currsize + shi.currsize
+                               + tbi.currsize,
+                               "maxsize": bi.maxsize + shi.maxsize
+                               + tbi.maxsize},
             "mesh": {"data_parallel": self.config.detector.data_parallel,
-                     "devices": devices},
+                     "devices": devices,
+                     "frame_parallel": self.config.detector.frame_parallel,
+                     "tile_devices": tiles},
+            "autotune": autotune_cache.stats(),
             "warmed": sorted(self._warm),
             "calls": dict(self._stats),
         }
@@ -231,4 +254,7 @@ class DetectionSession:
         _single_fn.cache_clear()
         _batch_fn.cache_clear()
         _sharded_batch_fn.cache_clear()
+        _tile_local_fn.cache_clear()
+        _tiled_single_fn.cache_clear()
+        _tiled_batch_fn.cache_clear()
         self._warm.clear()

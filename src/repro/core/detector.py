@@ -50,6 +50,16 @@ window of a pad frame fails the inside-frame test and decodes to an
 empty result; the pad rows are sliced off before the Detections is
 built. Per-frame results are byte-identical to the single-device path
 (tests/test_sharded.py pins this per backend/numerics mode).
+
+The TILED path adds intra-frame parallelism on top of both: with
+`cfg.frame_parallel != 1`, frames whose padded bucket clears
+`frame_parallel_min_area` split ONE frame's pyramid work over the
+'tile' axis of a ('data', 'tile') mesh -- by row-slab of each scale's
+score grid (exact descriptor halo) or by whole scale-groups
+(cfg.tile_mode). Each tile emits a local top-k; an exact union re-rank
+(core/tiling.py:merge_topk) plus one nms_keep pass reproduce the
+untiled result box-identically (tests/test_tiled.py), taking worst-case
+single-frame latency from one chip to all of them (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -91,7 +101,11 @@ class DetectorConfig:
     scales: Tuple[float, ...] = (1.0, 0.8, 0.64)
     score_threshold: float = 0.0          # sign(D(x)) per eq. (7)
     nms_iou: float = 0.3
-    max_detections: int = 256             # device top-k size (K)
+    max_detections: int = 0               # device top-k size (K).
+    #   0 = AUTO: K = min(n, max(256, ceil(n / 256))) grows with the
+    #   window count n, so UHD-sized grids don't silently saturate
+    #   while every pre-UHD bucket keeps the historical K=256 (n stays
+    #   < 65536 there). n > 0 pins K exactly (the legacy behavior).
     backend: str = "ref"                  # stage backend for dense HOG
     shape_bucket: int = 32                # frames pad up to multiples of this
     batch_chunk: int = 0                  # detect_batch vmap width: frames
@@ -109,6 +123,33 @@ class DetectorConfig:
     #   of the mesh size with masked-out zero frames and runs the
     #   per-bucket program under shard_map over the 'data' mesh axis
     #   (launch/mesh.py:make_detection_mesh) -- see DESIGN.md §10.
+    frame_parallel: int = 1               # devices tiling ONE frame's
+    #   pyramid (intra-frame parallelism): 1 = off, 0 = every device
+    #   left over after the batch axis (device_count // data_parallel),
+    #   n > 1 = exactly n tiles. Frames whose padded bucket area
+    #   (ph * pw) >= frame_parallel_min_area route to the tiled path:
+    #   per-tile local top-k under shard_map over the 'tile' mesh axis
+    #   (launch/mesh.py:make_tiled_mesh), then an exact union re-rank +
+    #   one NMS pass -- box-identical to the untiled program
+    #   (core/tiling.py, DESIGN.md §11). Composes with data_parallel as
+    #   a 2-D (data, tile) schedule for batches.
+    tile_mode: str = "slab"               # intra-frame decomposition:
+    #   "slab" = row-slabs of each scale's score grid (halo recompute,
+    #   balanced rows), "scale" = whole pyramid scales greedily balanced
+    #   over tiles by window count (no halo, coarser balance).
+    frame_parallel_min_area: int = 0      # only frames with bucket area
+    #   ph * pw >= this use the tiled path; 0 = every frame (when
+    #   frame_parallel resolves > 1). The "uhd" preset sets 1280*720 so
+    #   small frames keep the cheaper untiled program.
+    pyramid_resize: str = "matmul"        # pyramid resize arithmetic:
+    #   "matmul" = dense two-matmul form (the PR 1-5 default; O(src)
+    #   per output pixel), "banded" = the SAME interpolation weights
+    #   applied as <= ~4 fixed-order multiply-adds per output pixel
+    #   (core/tiling.py:resize_banded; O(taps) -- the UHD-fast form,
+    #   and per-element, hence exactly tiling-invariant). The two modes
+    #   differ only in float accumulation order (final-ulp score
+    #   deltas); each mode is self-consistent, and tiled == untiled
+    #   bitwise WITHIN either mode.
 
 
 def scene_blocks(gray: Array, cfg: HOGConfig,
@@ -231,6 +272,18 @@ def _round_up(a: int, b: int) -> int:
     return -(-a // b) * b if b > 1 else a
 
 
+def _resolve_k(cfg: DetectorConfig, n: int) -> int:
+    """Top-k size for a program with n window positions. Auto mode
+    (max_detections == 0) scales K with the grid so big frames don't
+    silently saturate: K = max(256, ceil(n / 256)) clamped to n --
+    exactly 256 for every bucket below ~65k windows (the historical
+    constant), ~953 at 4K's 244k windows. An explicit max_detections
+    pins K (legacy / memory-bound deployments)."""
+    if cfg.max_detections:
+        return min(cfg.max_detections, n)
+    return min(n, max(256, -(-n // 256)))
+
+
 @lru_cache(maxsize=256)
 def _resize_weights(src: int, dst: int) -> np.ndarray:
     """(dst, src) row-weight matrix reproducing jax.image.resize's
@@ -240,8 +293,12 @@ def _resize_weights(src: int, dst: int) -> np.ndarray:
     gather-based resize but in MXU/BLAS form, ~30% faster on the CPU
     host and one fused op per axis on TPU."""
     import jax.image
-    eye = jnp.eye(src, dtype=jnp.float32)
-    return np.asarray(jax.image.resize(eye, (dst, src), "linear"))
+    # first use may be inside a jit trace (resize_banded builds its tap
+    # tables lazily from program bodies); escape it so the identity
+    # resize runs eagerly and converts to a concrete array
+    with jax.ensure_compile_time_eval():
+        eye = jnp.eye(src, dtype=jnp.float32)
+        return np.asarray(jax.image.resize(eye, (dst, src), "linear"))
 
 
 def _frame_hw(shape) -> Tuple[int, int]:
@@ -327,22 +384,33 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
     boxes_tab = np.concatenate(box_rows)
     scale_tab = np.concatenate(scale_rows)
     n = len(boxes_tab)
-    k = min(cfg.max_detections, n)
+    k = _resolve_k(cfg, n)
     boxes_dev = jnp.asarray(boxes_tab)
 
+    if cfg.pyramid_resize not in ("matmul", "banded"):
+        raise ValueError(
+            f"DetectorConfig.pyramid_resize={cfg.pyramid_resize!r}: "
+            f"expected 'matmul' or 'banded'")
+    banded = cfg.pyramid_resize == "banded"
     # per-scale resize as two matmuls (exact jax.image.resize weights,
     # baked as jit constants); the full-res gray is shared, so the
     # grayscale conversion + pyramid schedule run once per frame and
-    # every scale's resize->stages->score chain hangs off one buffer
-    resize_w = {(sh, sw): (jnp.asarray(_resize_weights(ph, sh)),
-                           jnp.asarray(_resize_weights(pw, sw)))
-                for sh, sw, _ in specs if (sh, sw) != (ph, pw)}
+    # every scale's resize->stages->score chain hangs off one buffer.
+    # Under pyramid_resize="banded" the same weights apply in band form
+    # instead (tiling.resize_banded builds its own tables).
+    resize_w = {} if banded else \
+        {(sh, sw): (jnp.asarray(_resize_weights(ph, sh)),
+                    jnp.asarray(_resize_weights(pw, sw)))
+         for sh, sw, _ in specs if (sh, sw) != (ph, pw)}
 
     def fn(gray: Array, w: Array, b: Array, hw: Array):
+        from repro.core.tiling import resize_banded
         parts = []
         for sh, sw, _ in specs:
             if (sh, sw) == (ph, pw):
                 g = gray
+            elif banded:
+                g = resize_banded(gray, sh, sw)
             else:
                 wy, wx = resize_w[(sh, sw)]
                 g = (wy @ gray) @ wx.T
@@ -519,6 +587,339 @@ def _sharded_batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
     return jax.jit(fn, **donate_kw)
 
 
+# --------------------------------------------- intra-frame tiled program
+# The frame-parallel path (DESIGN.md §11): one frame's pyramid work laid
+# over the 'tile' axis of a (data, tile) mesh. Each tile runs a LOCAL
+# program over the window positions it owns -- a row-slab of every
+# scale's score grid (with an exact descriptor halo) or a whole
+# scale-group -- and produces its local top-k; tiling.merge_topk then
+# re-ranks the union exactly and ONE nms_keep pass over the merged list
+# reproduces the untiled keep set, so results are box-identical to the
+# untiled program per backend/numerics mode (tests/test_tiled.py).
+
+
+def _resolve_fp(cfg: DetectorConfig, dp: Optional[int] = None) -> int:
+    """Resolve cfg.frame_parallel to a concrete tile count. 1 stays 1
+    without initializing the backend (the untiled path must not pay a
+    device query); 0 means every device left over after the batch axis
+    (device_count // data_parallel, at least 1); an explicit n must fit
+    the host together with the data axis."""
+    fp = cfg.frame_parallel
+    if fp == 1:
+        return 1
+    if dp is None:
+        dp = _resolve_dp(cfg)
+    n = jax.device_count()
+    if fp == 0:
+        return max(1, n // dp)
+    if fp < 1 or dp * fp > n:
+        raise ValueError(
+            f"DetectorConfig.frame_parallel={fp}: with data_parallel="
+            f"{dp} the host's {n} visible device(s) allow at most "
+            f"{max(1, n // dp)} tiles; use 0 (= all remaining) or a "
+            f"value in [1, {max(1, n // dp)}]")
+    return fp
+
+
+@lru_cache(maxsize=8)
+def _tile_mesh(dp: int, fp: int):
+    """The 2-D ('data', 'tile') mesh tiled programs run over (deferred
+    + cached like _detection_mesh)."""
+    from repro.launch.mesh import make_tiled_mesh
+    return make_tiled_mesh(dp, fp)
+
+
+@lru_cache(maxsize=64)
+def _tile_local_fn(ph: int, pw: int, fp: int,
+                   cfg: DetectorConfig) -> Optional[Callable]:
+    """One tile's local program: (gray_pad, w, b, hw) -> (top, idx,
+    n_valid_local), where top/idx are the tile's LOCAL top-k over the
+    global K (scores descending, -inf padded; idx = global flat window
+    index, n for phantom rows) and the tile id comes from
+    lax.axis_index('tile') -- one SPMD program for all tiles.
+
+    tile_mode="slab": every scale is split into row-slabs of its score
+    grid. A tile owning `slab` score rows computes hs = (slab + wbh +
+    block - 2) * cell + 2 scaled-pixel rows starting at its cell-aligned
+    offset d * slab * cell -- the (wbh + block - 2) cell-row descriptor
+    halo plus the 2-px gradient border -- so every owned descriptor is
+    built from exactly the pixels the untiled program uses. The resize
+    tables (band or matmul row-weights) are zero-extended so the last
+    tile's overhang computes exact zeros, and overhang score rows are
+    masked to (-inf, idx=n) phantoms.
+
+    tile_mode="scale": pyramid scales are greedily balanced over tiles
+    by window count (tiling.scale_groups; groups may be empty) and each
+    tile computes its scales FULL-frame with the exact expressions the
+    untiled program uses, via one lax.switch on the tile id.
+
+    Box-identity of the merged result rests on the tiling invariance of
+    the per-tile arithmetic: banded resize is per-element; the matmul
+    resize runs the full untiled product per tile and slices only
+    RESULT rows (shape-dependent GEMM blocking makes anything less
+    non-bitwise, see the inline note); the dense HOG
+    stages are per-cell/per-block local; and local lists keep ascending
+    global index among equal scores (see tiling.merge_topk).
+    """
+    from repro.core import tiling
+    base = _frame_program(ph, pw, cfg)
+    if base.raw is None:
+        return None
+    hcfg = cfg.hog
+    cell = hcfg.cell
+    n, k = base.n_positions, base.k
+    boxes_dev = jnp.asarray(base.boxes)
+    thr = cfg.score_threshold
+    banded = cfg.pyramid_resize == "banded"
+    if cfg.tile_mode not in ("slab", "scale"):
+        raise ValueError(
+            f"DetectorConfig.tile_mode={cfg.tile_mode!r}: expected "
+            f"'slab' or 'scale'")
+
+    # per_scale is the untiled program's own geometry; rebuild each
+    # scale's pixel shape and flat-index base from it so both paths
+    # index the one box table identically
+    specs = []
+    off = 0
+    for s, sph, spw in base.per_scale:
+        sh, sw = int(ph * s), int(pw * s)
+        specs.append((sh, sw, s, sph, spw, off))
+        off += sph * spw
+    assert off == n, (off, n)
+
+    def _finish(parts_s, parts_i, nv):
+        s_all = parts_s[0] if len(parts_s) == 1 else jnp.concatenate(parts_s)
+        i_all = parts_i[0] if len(parts_i) == 1 else jnp.concatenate(parts_i)
+        if s_all.shape[0] < k:
+            padn = k - s_all.shape[0]
+            s_all = jnp.concatenate(
+                [s_all, jnp.full((padn,), -jnp.inf, s_all.dtype)])
+            i_all = jnp.concatenate(
+                [i_all, jnp.full((padn,), n, jnp.int32)])
+        top, pos = jax.lax.top_k(s_all, k)
+        return top, i_all[pos], nv
+
+    if cfg.tile_mode == "slab":
+        plans = []
+        for sh, sw, s, sph, spw, base_i in specs:
+            slab = tiling.slab_rows(sph, fp)
+            hs = tiling.slab_pixel_rows(slab, hcfg)
+            # resize tables must cover the LAST tile's slab window;
+            # rows past the scaled image are zero-weight (exact zeros)
+            L = max(sh, (fp - 1) * slab * cell + hs)
+            p = dict(sph=sph, spw=spw, base=base_i, slab=slab, hs=hs)
+            if (sh, sw) == (ph, pw):
+                p["mode"] = "direct"
+                p["L"] = L
+            elif banded:
+                lo_r, w_r = tiling.extend_band(
+                    *tiling.band_weights(ph, sh), L)
+                p.update(mode="banded", lo_r=jnp.asarray(lo_r),
+                         w_r=jnp.asarray(w_r),
+                         col=(tiling.band_weights(pw, sw)
+                              if sw != pw else None))
+            else:
+                # full-shape weights: the tile runs the EXACT untiled
+                # matmul and slices output rows after (see `local`)
+                p.update(mode="matmul", sh=sh, L=L,
+                         wy=jnp.asarray(_resize_weights(ph, sh)),
+                         wx=(jnp.asarray(_resize_weights(pw, sw))
+                             if sw != pw else None))
+            plans.append(p)
+
+        def local(gray: Array, wv: Array, bv: Array, hw: Array):
+            d = jax.lax.axis_index("tile")
+            parts_s, parts_i = [], []
+            nv = jnp.zeros((), jnp.int32)
+            for p in plans:
+                slab, hs, spw = p["slab"], p["hs"], p["spw"]
+                poff = d * (slab * cell)        # cell-aligned pixel base
+                if p["mode"] == "direct":
+                    g_ext = jnp.pad(gray, ((0, p["L"] - ph), (0, 0)))
+                    gs = jax.lax.dynamic_slice(g_ext, (poff, 0), (hs, pw))
+                elif p["mode"] == "banded":
+                    lo_loc = jax.lax.dynamic_slice(p["lo_r"], (poff,), (hs,))
+                    w_loc = jax.lax.dynamic_slice(
+                        p["w_r"], (poff, 0), (hs, p["w_r"].shape[1]))
+                    g_pad = jnp.pad(gray, ((0, p["w_r"].shape[1]), (0, 0)))
+                    gs = tiling.band_rows(g_pad, lo_loc, w_loc)
+                    if p["col"] is not None:
+                        lo_c, w_c = p["col"]
+                        gs = tiling.band_cols(
+                            jnp.pad(gs, ((0, 0), (0, w_c.shape[1]))),
+                            jnp.asarray(lo_c), jnp.asarray(w_c))
+                else:
+                    # matmul resize is NOT sliceable on its reduction
+                    # OR output rows pre-hoc: XLA picks GEMM blocking
+                    # (and with it the fp32 accumulation order) from
+                    # the operand shapes, so a (hs, ph) slice of wy can
+                    # produce different low bits than the same rows of
+                    # the full product. Run the untiled expression
+                    # verbatim and slice the RESULT -- data movement
+                    # only, bitwise by construction. Tiling then buys
+                    # no resize savings in this mode (the banded mode
+                    # is the performance path); it stays for parity.
+                    gs = p["wy"] @ gray
+                    if p["wx"] is not None:
+                        gs = gs @ p["wx"].T
+                    gs = jnp.pad(gs, ((0, p["L"] - p["sh"]), (0, 0)))
+                    gs = jax.lax.dynamic_slice(
+                        gs, (poff, 0), (hs, gs.shape[1]))
+                smap = score_map(gs, wv, bv, hcfg, cfg.backend)
+                rows = d * slab + jnp.arange(slab, dtype=jnp.int32)
+                idx = (p["base"] + rows[:, None] * spw
+                       + jnp.arange(spw, dtype=jnp.int32)[None, :]
+                       ).reshape(-1)
+                owned = jnp.repeat(rows < p["sph"], spw)
+                bx = boxes_dev[idx]             # gather clamps overhang
+                inside = (bx[:, 2] <= hw[0] + 1e-4) \
+                    & (bx[:, 3] <= hw[1] + 1e-4)
+                valid = owned & inside & (smap.reshape(-1) > thr)
+                parts_s.append(jnp.where(valid, smap.reshape(-1), -jnp.inf))
+                parts_i.append(jnp.where(owned, idx, n))
+                nv = nv + jnp.sum(valid)
+            return _finish(parts_s, parts_i, nv)
+
+        return local
+
+    # tile_mode == "scale": whole scales per tile, one switch branch
+    # per tile; every branch pads to the same candidate count
+    groups = tiling.scale_groups(base.per_scale, fp)
+    pmax = max([k] + [sum(sph * spw for _, sph, spw in
+                          (base.per_scale[i] for i in g)) for g in groups])
+    rw = {} if banded else \
+        {(sh, sw): (jnp.asarray(_resize_weights(ph, sh)),
+                    jnp.asarray(_resize_weights(pw, sw)))
+         for sh, sw, _, _, _, _ in specs if (sh, sw) != (ph, pw)}
+
+    def make_branch(group):
+        gspecs = [specs[i] for i in group]
+
+        def branch(gray: Array, wv: Array, bv: Array, hw: Array):
+            parts_s = []
+            parts_i = []
+            nv = jnp.zeros((), jnp.int32)
+            for sh, sw, s, sph, spw, base_i in gspecs:
+                # exact same per-scale expressions as the untiled fn
+                if (sh, sw) == (ph, pw):
+                    g = gray
+                elif banded:
+                    g = tiling.resize_banded(gray, sh, sw)
+                else:
+                    wy, wx = rw[(sh, sw)]
+                    g = (wy @ gray) @ wx.T
+                flat = score_map(g, wv, bv, hcfg, cfg.backend).reshape(-1)
+                bx = boxes_dev[base_i:base_i + sph * spw]
+                inside = (bx[:, 2] <= hw[0] + 1e-4) \
+                    & (bx[:, 3] <= hw[1] + 1e-4)
+                valid = inside & (flat > thr)
+                parts_s.append(jnp.where(valid, flat, -jnp.inf))
+                parts_i.append(jnp.arange(base_i, base_i + sph * spw,
+                                          dtype=jnp.int32))
+                nv = nv + jnp.sum(valid)
+            have = sum(sph * spw for _, _, _, sph, spw, _ in gspecs)
+            if have < pmax:
+                parts_s.append(jnp.full((pmax - have,), -jnp.inf))
+                parts_i.append(jnp.full((pmax - have,), n, jnp.int32))
+            return (parts_s[0] if len(parts_s) == 1
+                    else jnp.concatenate(parts_s),
+                    parts_i[0] if len(parts_i) == 1
+                    else jnp.concatenate(parts_i),
+                    nv)
+
+        return branch
+
+    branches = [make_branch(g) for g in groups]
+
+    def local(gray: Array, wv: Array, bv: Array, hw: Array):
+        d = jax.lax.axis_index("tile")
+        s_all, i_all, nv = jax.lax.switch(d, branches, gray, wv, bv, hw)
+        top, pos = jax.lax.top_k(s_all, k)
+        return top, i_all[pos], nv
+
+    return local
+
+
+@lru_cache(maxsize=64)
+def _tiled_single_fn(h: int, w: int, ph: int, pw: int, fp: int,
+                     cfg: DetectorConfig) -> "jax.stages.Wrapped":
+    """Single-frame tiled program: the per-tile local program under
+    shard_map over the 'tile' axis (frame + SVM params replicated),
+    stacked local top-k lists out, then ONE exact merge + NMS in the
+    enclosing jit -- the merge runs once, not replicated per tile, which
+    matters on hosts where forced devices share cores. Same signature
+    and donation contract as _single_fn."""
+    from repro.core.tiling import merge_topk
+    base = _frame_program(ph, pw, cfg)
+    if base.raw is None:
+        return None
+    local = _tile_local_fn(ph, pw, fp, cfg)
+    boxes_dev = jnp.asarray(base.boxes)
+    mesh = _tile_mesh(1, fp)
+
+    def tile_fn(gray: Array, wv: Array, bv: Array, hw: Array):
+        t, i, v = local(gray, wv, bv, hw)
+        return t[None], i[None], v[None]
+
+    sm = shard_map(tile_fn, mesh=mesh,
+                   in_specs=(P(), P(), P(), P()),
+                   out_specs=(P("tile"), P("tile"), P("tile")),
+                   check_vma=False)
+
+    def fn(frame: Array, wv: Array, bv: Array, hw: Array):
+        gray = _prep_frame(frame, h, w, ph, pw)
+        tl, il, nl = sm(gray, wv, bv, hw)
+        top, idx = merge_topk(tl, il, base.k)
+        keep = nms_keep(boxes_dev[idx], top, cfg.nms_iou)
+        return top, idx, keep, jnp.sum(nl)
+
+    return jax.jit(fn, donate_argnums=(0,) if _donate() else ())
+
+
+@lru_cache(maxsize=64)
+def _tiled_batch_fn(h: int, w: int, ph: int, pw: int, batch: int,
+                    dp: int, fp: int, cfg: DetectorConfig,
+                    donate: bool = False) -> "jax.stages.Wrapped":
+    """Batched 2-D (data x tile) schedule: the frame batch is sharded
+    over 'data' exactly as _sharded_batch_fn (zero-frame padding, same
+    chunked scan-vs-vmap schedule per device column), and within each
+    frame the pyramid runs tiled over 'tile'. The merge happens inside
+    the shard_map per frame -- all_gather of the (k,) local lists plus a
+    psum of the valid counts over 'tile' are the only collectives; NMS
+    then runs on the merged list (replicated within a frame's tile row,
+    sharded over 'data'). Per-frame results byte-identical to the
+    untiled / tiled-single paths. One jit per (true-shape, bucket, B,
+    dp, fp) tuple."""
+    from repro.core.tiling import merge_topk
+    base = _frame_program(ph, pw, cfg)
+    if base.raw is None:
+        return None
+    assert batch % dp == 0, (batch, dp)
+    local_b = batch // dp
+    local = _tile_local_fn(ph, pw, fp, cfg)
+    boxes_dev = jnp.asarray(base.boxes)
+    mesh = _tile_mesh(dp, fp)
+
+    def one(frame: Array, wv: Array, bv: Array, hw: Array):
+        gray = _prep_frame(frame, h, w, ph, pw)
+        t, i, v = local(gray, wv, bv, hw)
+        tl = jax.lax.all_gather(t, "tile")              # (fp, k)
+        il = jax.lax.all_gather(i, "tile")
+        nv = jax.lax.psum(v, "tile")
+        top, idx = merge_topk(tl, il, base.k)
+        keep = nms_keep(boxes_dev[idx], top, cfg.nms_iou)
+        return top, idx, keep, nv
+
+    local_fn = _chunked_schedule(one, max(1, cfg.batch_chunk), local_b)
+    data = P("data")
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(data, P(), P(), data),
+                   out_specs=(data, data, data, data),
+                   check_vma=False)
+    donate_kw = dict(donate_argnums=(0,)) if donate else {}
+    return jax.jit(fn, **donate_kw)
+
+
 # ------------------------------------------------- batch-chunk autotune
 # The scan-vs-vmap layout choice used to be a hardcoded CPU/accelerator
 # guess (batch_chunk=1 vs =B). It is now measured: the first
@@ -534,12 +935,15 @@ _AUTOTUNE_PROBE_ITERS = 3
 
 def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
                     cfg: DetectorConfig, frame_shape: Tuple[int, ...],
-                    frame_dtype, dp: int = 1) -> int:
+                    frame_dtype, dp: int = 1, fp: int = 1) -> int:
     import time
+
+    from repro.core import autotune_cache
     layout = f"{'rgb' if len(frame_shape) == 4 else 'gray'}-{frame_dtype}"
-    key = (h, w, ph, pw, batch, cfg, layout, dp)
+    key = (h, w, ph, pw, batch, cfg, layout, dp, fp)
     hit = _AUTOTUNE.get(key)
     if hit is not None:
+        autotune_cache.note_memory_hit()
         return hit["chunk"]
     # under sharding the chunk schedules each device's LOCAL sub-batch
     local = batch // dp
@@ -547,6 +951,13 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
     if len(candidates) == 1:
         _AUTOTUNE[key] = {"chunk": candidates[0], "probe_ms": {}}
         return candidates[0]
+    # a decision probed on an equivalent host may be on disk -- skip
+    # the probe compiles entirely on warm starts (autotune_cache)
+    dkey = autotune_cache.entry_key(_autotune_key_str(key), cfg)
+    disk = autotune_cache.lookup(dkey)
+    if disk is not None and disk["chunk"] in candidates:
+        _AUTOTUNE[key] = {**disk, "source": "disk"}
+        return disk["chunk"]
     # probe with the CALLER's frame layout (RGB uint8 vs gray f32, ...)
     # and the production donate flag, so the probe times -- and
     # pre-compiles -- the exact executable the real call will run,
@@ -563,9 +974,12 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
     probe_ms = {}
     for c in candidates:
         c_cfg = dataclasses.replace(cfg, batch_chunk=c)
-        fn = (_sharded_batch_fn(h, w, ph, pw, batch, dp, c_cfg, donate)
-              if dp > 1 else
-              _batch_fn(h, w, ph, pw, batch, c_cfg, donate))
+        if fp > 1:
+            fn = _tiled_batch_fn(h, w, ph, pw, batch, dp, fp, c_cfg, donate)
+        elif dp > 1:
+            fn = _sharded_batch_fn(h, w, ph, pw, batch, dp, c_cfg, donate)
+        else:
+            fn = _batch_fn(h, w, ph, pw, batch, c_cfg, donate)
         jax.block_until_ready(fn(mk(), wv, bv, hw_b))     # compile
         best = float("inf")
         for _ in range(_AUTOTUNE_PROBE_ITERS):
@@ -574,19 +988,27 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
             best = min(best, time.perf_counter() - t0)
         probe_ms[c] = best * 1e3
     chunk = min(probe_ms, key=probe_ms.get)
-    _AUTOTUNE[key] = {"chunk": chunk, "probe_ms": probe_ms}
+    _AUTOTUNE[key] = {"chunk": chunk, "probe_ms": probe_ms,
+                      "source": "probe"}
+    autotune_cache.store(dkey, chunk, probe_ms)
     return chunk
+
+
+def _autotune_key_str(k: tuple) -> str:
+    mesh = f"data:{k[7]}" + (f",tile:{k[8]}" if k[8] > 1 else "")
+    return f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} mesh={mesh} [{k[6]}]"
 
 
 def autotune_report() -> dict:
     """Chosen detect_batch schedules, keyed by the probed geometry,
     mesh and frame layout: {"HxW->PHxPW B=n mesh=data:d [rgb-uint8]":
-    {"chunk": c, "probe_ms": {candidate: ms}}}. Every key carries the
-    mesh dimension (data:1 = the unsharded path) so BENCH entries stay
-    unambiguous about which device layout a schedule was probed on."""
-    return {f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} mesh=data:{k[7]} "
-            f"[{k[6]}]": dict(v)
-            for k, v in _AUTOTUNE.items()}
+    {"chunk": c, "probe_ms": {candidate: ms}, "source": ...}}. Every
+    key carries the mesh layout (data:1 = the unsharded path; a
+    ",tile:f" suffix marks the 2-D frame-parallel schedule) so BENCH
+    entries stay unambiguous about which device layout a schedule was
+    probed on; "source" says whether the decision was probed live or
+    restored from the disk cache (core/autotune_cache.py)."""
+    return {_autotune_key_str(k): dict(v) for k, v in _AUTOTUNE.items()}
 
 
 class FrameDetector:
@@ -613,6 +1035,25 @@ class FrameDetector:
         single-device path, the mesh size under sharding. The serving
         microbatcher scales its coalescing target by this."""
         return _resolve_dp(self.cfg)
+
+    @property
+    def frame_devices(self) -> int:
+        """Resolved device count of the intra-frame ('tile') axis: 1
+        when frame parallelism is off. Whether a given frame actually
+        runs tiled also depends on frame_parallel_min_area (see
+        _tiled_for)."""
+        return _resolve_fp(self.cfg)
+
+    def _tiled_for(self, ph: int, pw: int, dp: int = 1) -> int:
+        """Tile count a (ph, pw)-bucket frame runs under: the resolved
+        'tile' axis when the bucket clears the area threshold, else 1
+        (the untiled program). The threshold is on the PADDED bucket
+        area -- that is the compute the program actually does, and it
+        keeps routing deterministic per program."""
+        fp = _resolve_fp(self.cfg, dp)
+        if fp > 1 and ph * pw >= self.cfg.frame_parallel_min_area:
+            return fp
+        return 1
 
     @staticmethod
     def _to_gray(image: Array) -> Array:
@@ -660,7 +1101,9 @@ class FrameDetector:
             # the program donates its frame argument; a caller-owned
             # device buffer must not be invalidated under them
             frame = jnp.array(frame, copy=True)
-        fn = _single_fn(h, w, ph, pw, self.cfg)
+        fp = self._tiled_for(ph, pw)
+        fn = (_tiled_single_fn(h, w, ph, pw, fp, self.cfg) if fp > 1
+              else _single_fn(h, w, ph, pw, self.cfg))
         top, idx, keep, n_valid = fn(frame, self.svm["w"], self.svm["b"],
                                      jnp.asarray([h, w], jnp.float32))
         return Detections(top, idx, keep, n_valid, prog.tables)
@@ -746,14 +1189,19 @@ class FrameDetector:
                             frames_b.dtype)
             frames_b = jnp.concatenate([frames_b, pad])
             hws = list(hws) + [(0, 0)] * (n_pad - n)
+        fp = self._tiled_for(ph, pw, dp)
         if cfg.batch_chunk == 0:         # autotune scan-vs-vmap (first use)
             chunk = _autotune_chunk(th, tw, ph, pw, n_pad, cfg,
                                     tuple(frames_b.shape), frames_b.dtype,
-                                    dp)
+                                    dp, fp)
             cfg = dataclasses.replace(cfg, batch_chunk=chunk)
-        fn = (_sharded_batch_fn(th, tw, ph, pw, n_pad, dp, cfg, _donate())
-              if dp > 1 else
-              _batch_fn(th, tw, ph, pw, n_pad, cfg, _donate()))
+        if fp > 1:
+            fn = _tiled_batch_fn(th, tw, ph, pw, n_pad, dp, fp, cfg,
+                                 _donate())
+        elif dp > 1:
+            fn = _sharded_batch_fn(th, tw, ph, pw, n_pad, dp, cfg, _donate())
+        else:
+            fn = _batch_fn(th, tw, ph, pw, n_pad, cfg, _donate())
         if _donate() and n_pad == n and isinstance(frames, jax.Array):
             # the batched program donates its frame stack; only copy
             # when the caller handed us their own device buffer (lists,

@@ -1,0 +1,195 @@
+"""Intra-frame tile planning: the geometry, resize arithmetic and exact
+top-k merge behind the tiled (frame-parallel) detection path.
+
+The paper's thesis is that HOG+SVM wins come from parallel hardware
+decomposition, not algorithm changes; the UHD follow-up (PAPERS.md,
+arxiv 2204.10619) splits one 3840x2160 frame into parallel processing
+lanes. This module is that decomposition for the jax_pallas detector
+(DESIGN.md §11): one frame's pyramid work is laid over the 'tile' axis
+of a device mesh, each tile produces a LOCAL top-k over the window
+positions it owns, and a device-side merge re-ranks the union so the
+result is box-identical to the untiled program.
+
+Two decompositions (DetectorConfig.tile_mode):
+
+  * "slab"  -- row-slabs of each scale's score grid. A tile owning
+    `slab` score rows recomputes a halo of (window_blocks + block - 2)
+    cell rows = 122 px so its descriptors are exact (the same halo rule
+    the PR-4 dense kernels use inside one device, lifted to the mesh).
+  * "scale" -- whole pyramid scales, greedily balanced over tiles by
+    window count (scales are independent until top-k).
+
+Box-identity rests on two arithmetic facts, both load-bearing and both
+pinned by tests/test_tiled.py:
+
+  * the banded resize (`resize_banded`) applies the exact
+    jax.image.resize "linear" taps as <= ~4 fixed-order multiply-adds
+    PER OUTPUT ELEMENT, so any row-slice of its output equals the
+    bitwise row-slice of the full output (tiling-invariant by
+    construction), and
+  * the "matmul" resize mode stays exact under slab tiling only by
+    running the FULL untiled product per tile and slicing result rows
+    afterwards: XLA's GEMM blocking (and with it the fp32 accumulation
+    order) depends on the operand shapes, so even an output-row-sliced
+    weight matrix can differ from the full product in final ulps --
+    and windowing the *reduction* axis certainly does.
+
+`merge_topk` makes the union re-rank exact: every tile's local list is
+ordered by (-score, global flat index) -- the same key lax.top_k sorts
+the untiled score vector by -- so one two-key sort of the union
+reproduces the untiled top-k including tie-breaks, and a single
+nms_keep over the merged list equals untiled NMS.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ------------------------------------------------- banded exact resize
+
+@lru_cache(maxsize=256)
+def band_weights(src: int, dst: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Band form of the (dst, src) resize weight matrix: per output row
+    the first source tap `lo[i]` and the T-wide tap weights `w[i, :]`
+    (zero-padded; T = widest support over all rows, <= ~4 for the
+    pyramid's scales). Same interpolation weights as the matmul form
+    (_resize_weights -- exact jax.image.resize "linear" incl.
+    anti-aliasing), just stored by support instead of dense."""
+    from repro.core.detector import _resize_weights
+    full = _resize_weights(src, dst)                       # (dst, src)
+    nz = np.abs(full) > 0
+    assert nz.any(axis=1).all(), "resize weight row with empty support"
+    first = nz.argmax(axis=1)
+    last = src - 1 - nz[:, ::-1].argmax(axis=1)
+    T = int((last - first + 1).max())
+    w = np.zeros((dst, T), np.float32)
+    rows = np.arange(dst)
+    for t in range(T):
+        col = first + t
+        ok = col <= last
+        w[ok, t] = full[rows[ok], col[ok]]
+    return first.astype(np.int32), w
+
+
+def extend_band(lo: np.ndarray, w: np.ndarray,
+                ext: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Zero-extend a band table to `ext` output rows: rows past the real
+    dst have all-zero weights (and lo 0), so a tile whose slab runs past
+    the scaled image computes exact zeros there -- those rows only ever
+    feed masked (phantom) score rows."""
+    if ext <= len(lo):
+        return lo, w
+    lo2 = np.zeros(ext, np.int32)
+    lo2[: len(lo)] = lo
+    w2 = np.zeros((ext, w.shape[1]), np.float32)
+    w2[: len(w)] = w
+    return lo2, w2
+
+
+def band_rows(g_pad: Array, lo: Array, w: Array) -> Array:
+    """out[i, :] = sum_t w[i, t] * g_pad[lo[i] + t, :], t ascending.
+
+    Per-output-element arithmetic with a fixed accumulation order, so
+    computing any subset of output rows (sliced lo/w) yields the
+    bitwise row-slice of the full output -- the tiling invariance the
+    tiled path's box-identity rests on. `g_pad` must carry T extra
+    trailing rows (zeros; only zero-weight taps can reach them)."""
+    acc = w[:, 0:1] * g_pad[lo]
+    for t in range(1, w.shape[1]):
+        acc = acc + w[:, t:t + 1] * g_pad[lo + t]
+    return acc
+
+
+def band_cols(g_pad: Array, lo: Array, w: Array) -> Array:
+    """Column-axis version of band_rows: out[:, j] = sum_t w[j, t] *
+    g_pad[:, lo[j] + t]. Same fixed-order, per-element contract."""
+    acc = g_pad[:, lo] * w[:, 0]
+    for t in range(1, w.shape[1]):
+        acc = acc + g_pad[:, lo + t] * w[:, t]
+    return acc
+
+
+def resize_banded(g: Array, sh: int, sw: int) -> Array:
+    """Full-frame banded resize (ph, pw) -> (sh, sw): rows then columns,
+    each axis as band_rows/band_cols over the exact production taps.
+
+    O(T) work per output element instead of the matmul form's O(src) --
+    the difference between ~1.06 s and ~0.03 s of resize per 4K frame
+    on the CPU host. The accumulation ORDER differs from the matmul
+    form, so "banded" and "matmul" scores differ in final float ulps;
+    each mode is self-consistent and exactly tiling-invariant (banded
+    per-element; matmul by slicing rows of the full product)."""
+    ph, pw = g.shape
+    if sh != ph:
+        lo, w = band_weights(ph, sh)
+        g = band_rows(jnp.pad(g, ((0, w.shape[1]), (0, 0))),
+                      jnp.asarray(lo), jnp.asarray(w))
+    if sw != pw:
+        lo, w = band_weights(pw, sw)
+        g = band_cols(jnp.pad(g, ((0, 0), (0, w.shape[1]))),
+                      jnp.asarray(lo), jnp.asarray(w))
+    return g
+
+
+# --------------------------------------------------- tile decomposition
+
+def slab_rows(sph: int, fp: int) -> int:
+    """Score rows each of fp tiles owns (ceil; the last tiles may own
+    fewer real rows -- the overhang is masked as phantom rows)."""
+    return -(-sph // fp)
+
+
+def slab_pixel_rows(slab: int, hcfg) -> int:
+    """Scaled-pixel rows one tile must compute to produce `slab` EXACT
+    score rows: (slab + window_blocks + block - 2) cell rows of `cell`
+    px plus the 2-px gradient border. The (wbh + block - 2)-cell-row
+    overhang past the owned rows is the descriptor halo -- 122 px for
+    the 130x66 window (15 window block rows, 2x2 blocks, 8-px cells)."""
+    return (slab + hcfg.blocks_hw[0] + hcfg.block - 2) * hcfg.cell + 2
+
+
+def scale_groups(per_scale: Sequence[Tuple[float, int, int]],
+                 fp: int) -> Tuple[Tuple[int, ...], ...]:
+    """Greedy balance of pyramid scales over fp tiles by window count:
+    largest scale first into the least-loaded group. Groups may be
+    empty when fp exceeds the scale count (those tiles contribute only
+    -inf padding). Each group keeps ascending scale order so its
+    concatenated global index table stays monotone -- the local-top-k
+    tie-break contract merge_topk relies on."""
+    loads = [0] * fp
+    bins: List[List[int]] = [[] for _ in range(fp)]
+    order = sorted(range(len(per_scale)),
+                   key=lambda i: (-per_scale[i][1] * per_scale[i][2], i))
+    for i in order:
+        j = min(range(fp), key=lambda j: (loads[j], j))
+        bins[j].append(i)
+        loads[j] += per_scale[i][1] * per_scale[i][2]
+    return tuple(tuple(sorted(b)) for b in bins)
+
+
+# ------------------------------------------------------- exact merge
+
+def merge_topk(scores: Array, idx: Array, k: int) -> Tuple[Array, Array]:
+    """Exact global top-k from stacked per-tile local top-k lists.
+
+    scores/idx: (fp, k) local lists (scores descending, -inf padded;
+    idx = global flat window index, n for phantom pad rows). An
+    ascending two-key sort on (-score, idx) reproduces lax.top_k's
+    order and tie-breaking (equal scores -> lower flat index first)
+    over the FULL window table: any member of the global top-k has at
+    most k-1 better candidates globally, hence at most k-1 better in
+    its own tile, so it survives its tile's local top-k and is present
+    in the union. -inf rows match too: each tile's local list keeps its
+    k lowest-index masked positions, which covers the k globally
+    lowest. Float negation is exact (sign-bit flip), so -(-s) == s
+    bitwise, including -inf."""
+    neg, order = jax.lax.sort((-scores.reshape(-1), idx.reshape(-1)),
+                              num_keys=2)
+    return -neg[:k], order[:k]

@@ -57,3 +57,32 @@ def make_detection_mesh(data_parallel: int = 0) -> Mesh:
             f"host has {n} visible device(s) (jax.devices()); "
             f"data_parallel must be 0 (= all) or in [1, {n}]")
     return Mesh(np.asarray(jax.devices()[:data]), ("data",))
+
+
+def make_tiled_mesh(data_parallel: int = 1, frame_parallel: int = 0) -> Mesh:
+    """2-D ('data', 'tile') mesh for intra-frame tiled detection.
+
+    The frame batch is sharded over 'data' (as in make_detection_mesh)
+    and each frame's pyramid work is split over 'tile' -- the tiled
+    detect programs (core/detector.py:_tiled_single_fn /
+    _tiled_batch_fn) run their per-tile local top-k under shard_map on
+    this mesh. `frame_parallel=0` takes every device left over after
+    the data axis; single-frame tiled latency uses data_parallel=1 with
+    'tile' spanning the host (DESIGN.md §11).
+    """
+    n = len(jax.devices())
+    dp = n if data_parallel == 0 else int(data_parallel)
+    if dp < 1 or dp > n:
+        raise ValueError(
+            f"make_tiled_mesh(data_parallel={data_parallel}): the host "
+            f"has {n} visible device(s) (jax.devices()); data_parallel "
+            f"must be 0 (= all) or in [1, {n}]")
+    fp = (n // dp) if frame_parallel == 0 else int(frame_parallel)
+    if fp < 1 or dp * fp > n:
+        raise ValueError(
+            f"make_tiled_mesh(data_parallel={data_parallel}, "
+            f"frame_parallel={frame_parallel}): with {n} visible "
+            f"device(s) and data_parallel={dp}, frame_parallel must be "
+            f"0 (= all remaining) or in [1, {n // dp}]")
+    devs = np.asarray(jax.devices()[: dp * fp]).reshape(dp, fp)
+    return Mesh(devs, ("data", "tile"))

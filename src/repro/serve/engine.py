@@ -131,7 +131,10 @@ class DetectionService:
         self.stats = {"batches": 0, "requests": 0, "occupancy": 0.0,
                       "frames": 0, "frame_ms": 0.0, "frame_boxes": 0,
                       "frame_batches": 0, "frame_occupancy": 0.0,
-                      "frame_rejects": 0, "devices": self.devices,
+                      "frame_rejects": 0, "frames_saturated": 0,
+                      "devices": self.devices,
+                      "tile_devices": max(
+                          1, getattr(self._detector, "frame_devices", 1)),
                       "device_frames": [0] * self.devices,
                       "per_device_occupancy": [0.0] * self.devices}
 
@@ -366,6 +369,7 @@ class DetectionService:
                 continue
             dets, saturated = dets
             self.stats["frames"] += 1
+            self.stats["frames_saturated"] += int(saturated)
             self.stats["frame_boxes"] += len(dets)
             self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
                 / self.stats["frames"]

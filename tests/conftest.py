@@ -13,3 +13,9 @@ if n:
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
         + f" --xla_force_host_platform_device_count={n}")
+
+# hermetic autotune: an empty path disables the DISK cache (a stale
+# ~/.cache entry from a previous run would short-circuit the probe the
+# autotune tests assert on); tests of the disk cache itself monkeypatch
+# this to a tmp file. In-memory autotune behavior is unchanged.
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "")

@@ -278,7 +278,8 @@ def test_session_sharded_preset_warmup_and_stats():
     ses = DetectionSession(SVM, cfg)
     assert ses.data_devices == n_dev
     stats = ses.warmup([(160, 128), (n_dev + 1, 160, 128)])
-    assert stats["mesh"] == {"data_parallel": 0, "devices": n_dev}
+    assert stats["mesh"] == {"data_parallel": 0, "devices": n_dev,
+                             "frame_parallel": 1, "tile_devices": 1}
     # traffic of the warmed shape: no new program compiles
     before = ses.cache_stats()["batch_programs"]["misses"]
     ses.detect_batch(_frames(n_dev + 1))
