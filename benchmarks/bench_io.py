@@ -1,0 +1,24 @@
+"""Shared BENCH_detect.json merge-update writer.
+
+Both bench entry points (bench_timing.py, bench_accuracy.py) record
+into the same BENCH_detect.json; each section must preserve the others'
+rows, so every writer goes through update_bench (read -> dict.update ->
+atomic-enough single write). Kept dependency-free so scripts can run
+directly (`python benchmarks/bench_accuracy.py`) or as a package module
+(`python -m benchmarks.run`) -- hence the dual-import dance at the use
+sites.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_detect.json"
+
+
+def update_bench(**updates) -> None:
+    """Merge-update BENCH_detect.json, preserving other sections."""
+    data = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
+    data.update(updates)
+    BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")

@@ -59,12 +59,10 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
 PR1_DENSE_BASELINE_MS = 67.44
 
 
-def _update_bench(**updates):
-    """Merge-update BENCH_detect.json so independent bench entry points
-    (full detect sweep, session_overhead) preserve each other's rows."""
-    data = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
-    data.update(updates)
-    BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")
+try:                                   # package-style (python -m benchmarks.run)
+    from benchmarks.bench_io import update_bench as _update_bench
+except ImportError:                    # direct: python benchmarks/bench_timing.py
+    from bench_io import update_bench as _update_bench
 
 
 def _time(fn, *args, iters=20, warmup=3):
@@ -797,6 +795,100 @@ def run_session_overhead(fast: bool = False) -> dict:
     return row
 
 
+# ---------------------------------------------------- fixed-point numerics
+# The quant section (DESIGN.md §12): is int8 scoring actually faster than
+# the bf16 MXU path, and what does the fixed datapath cost end to end?
+# Scoring is measured as the (M, 36) @ (36, 105) contribution matmul at
+# the dense-grid M of a 640x480 frame and of a UHD frame, int8 (exact
+# int32 accumulation + rank-1 rescale) vs bf16 (f32 accumulation) --
+# both as the jitted XLA form the ref backend runs, host-honest on CPU.
+# End-to-end compares the quant preset against the perf preset (same
+# fused dense backend, autotuned schedule) in ms/frame.
+
+def run_quant(fast: bool = False) -> dict:
+    import dataclasses
+
+    from repro.api.config import presets
+    from repro.core import quant
+    from repro.core.hog import HOGConfig
+    from repro.core.stages import dense_blocks as _dense
+
+    rng = np.random.default_rng(0)
+    row = {"host": "cpu", "scoring": {}, "e2e": {}}
+    print("# quant -- int8 fixed-point datapath vs the float chain")
+
+    # -------------------------- scoring: int8 vs bf16 contribution matmul
+    bh_bw, bd = 105, 36
+    wt = rng.normal(0, 0.05, size=(bd, bh_bw)).astype(np.float32)
+    wq, s_cols = quant.quantize_weight_columns(jnp.asarray(wt))
+    sizes = {"640x480": 58 * 78, "3840x2160": 268 * 478}
+    iters = 5 if fast else 20
+    for key, m_rows in sizes.items():
+        v = rng.random(size=(m_rows, bd)).astype(np.float32)
+        q, s_rows = quant.quantize_blocks(jnp.asarray(v))
+        q, s_rows = jax.block_until_ready((q, s_rows))
+        flat16 = jnp.asarray(v).astype(jnp.bfloat16)
+        wt16 = jnp.asarray(wt).astype(jnp.bfloat16)
+
+        @jax.jit
+        def _score_bf16(x, w):
+            return jax.lax.dot_general(
+                x, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @jax.jit
+        def _score_int8(xq, wq8, sr, sc):
+            ci = jax.lax.dot_general(
+                xq, wq8, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            return quant.rescale_scores(ci, sr, sc)
+
+        t_bf16 = _time(_score_bf16, flat16, wt16, iters=iters)
+        t_int8 = _time(_score_int8, q, wq, s_rows, s_cols, iters=iters)
+        row["scoring"][key] = {
+            "m_rows": int(m_rows),
+            "bf16_ms": t_bf16 * 1e3, "int8_ms": t_int8 * 1e3,
+            "int8_vs_bf16_speedup": t_bf16 / t_int8,
+        }
+        print(f"quant/score_{key},bf16={t_bf16*1e3:.3f}ms,"
+              f"int8={t_int8*1e3:.3f}ms,x{t_bf16/t_int8:.2f}")
+
+    # ------------------------------- agreement: fixed chain ref vs fused
+    cfg_fixed = HOGConfig(mode="cordic", numerics="fixed")
+    scene = rng.integers(0, 256, size=(240, 320)).astype(np.float32)
+    br = _dense(scene, cfg_fixed, backend="ref")
+    bf = _dense(scene, cfg_fixed, backend="fused")
+    agree = float(jnp.max(jnp.abs(br - bf)))
+    row["ref_vs_fused_max_abs"] = agree
+    ok = agree < 1e-5
+    print(f"quant/ref_vs_fused_max_abs,{agree:.2e},gate<1e-5")
+
+    # ----------------------------------- end to end: quant vs perf preset
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32)) * .01,
+           "b": jnp.float32(0.0)}
+    e2e_sizes = [(480, 640)] if fast else [(480, 640), (2160, 3840)]
+    e2e_iters = 3 if fast else 5
+    for (h, w) in e2e_sizes:
+        frame = rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+        key = f"{w}x{h}"
+        sub = {}
+        for name in ("quant", "perf"):
+            det = FrameDetector(svm, presets(name).detector)
+            det(frame)                               # compile warmup
+            sub[name] = _time_dist(lambda d=det: d(frame),
+                                   iters=e2e_iters, warmup=1)
+        sub["quant_vs_perf"] = sub["perf"]["min_ms"] / sub["quant"]["min_ms"]
+        row["e2e"][key] = sub
+        print(f"quant/e2e_{key},quant={sub['quant']['min_ms']:.1f}ms,"
+              f"perf={sub['perf']['min_ms']:.1f}ms,"
+              f"x{sub['quant_vs_perf']:.2f}")
+
+    row["ok"] = bool(ok)
+    _update_bench(quant=row)
+    print(f"quant/json,{BENCH_JSON.name},written")
+    return row
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -822,11 +914,18 @@ if __name__ == "__main__":
                          "XLA_FLAGS unless already set); exits 1 when "
                          "tiled results are not box-identical to the "
                          "untiled path")
+    ap.add_argument("--quant", action="store_true",
+                    help="measure + record the fixed-point numerics "
+                         "section (int8-vs-bf16 scoring, quant-vs-perf "
+                         "e2e ms/frame); exits 1 when the fixed chain's "
+                         "ref and fused backends disagree")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="--check: allowed regression fraction "
                          "(default 0.15 = 15%%)")
     a = ap.parse_args()
-    if a.uhd:
+    if a.quant:
+        sys.exit(0 if run_quant(fast=a.fast)["ok"] else 1)
+    elif a.uhd:
         sys.exit(0 if run_uhd(fast=a.fast)["ok"] else 1)
     elif a.sharded:
         sys.exit(0 if run_sharded(fast=a.fast)["ok"] else 1)

@@ -32,6 +32,14 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
                           row-slab tiles, banded resize) with an exact
                           top-k merge -- single-frame UHD latency path,
                           box-identical to untiled (DESIGN.md §11)
+    presets("quant")      the paper's fixed-point datapath end to end:
+                          integer CORDIC gradient/bin unit, int16 cell
+                          histograms, int8 block descriptors with
+                          per-block scale, int8x int8->int32 MXU scoring
+                          (HOGConfig.numerics="fixed", DESIGN.md §12).
+                          Accuracy within 1.5 points of fp32 on the
+                          paper's Table I split (bench_accuracy.py);
+                          byte-identical under data/tile sharding
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -188,6 +196,17 @@ def _register_builtin() -> None:
                                 pyramid_resize="banded",
                                 frame_parallel_min_area=1280 * 720,
                                 batch_chunk=0),
+        train=hog_svm.TRAIN))
+    # quant: the hardware paper's fixed-point datapath as a first-class
+    # mode -- numerics="fixed" routes every backend through the integer
+    # CORDIC mag/bin unit, int16 histograms, per-block int8 descriptors
+    # and the int8 x int8 -> int32 scoring matmul (fused dense backend,
+    # autotuned schedule). See DESIGN.md §12 and the BENCH "quant"
+    # section for int8-vs-bf16 scoring timings.
+    register_preset("quant", PipelineConfig(
+        name="quant", hog=hog_svm.QUANT,
+        detector=DetectorConfig(hog=hog_svm.QUANT, score_threshold=0.5,
+                                backend="fused", batch_chunk=0),
         train=hog_svm.TRAIN))
 
 

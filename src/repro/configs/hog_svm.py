@@ -19,6 +19,10 @@ CONFIG = HOGConfig(mode="sector")
 # §Perf: bf16 descriptors + bf16 SVM weights (fp32 accumulation)
 PERF = dataclasses.replace(CONFIG, feat_dtype="bf16")
 
+# the paper's actual datapath: integer CORDIC gradients, int16 cell
+# histograms, int8 block descriptors, int8 scoring matmul (DESIGN.md §12)
+QUANT = HOGConfig(mode="cordic", numerics="fixed")
+
 TRAIN = SVMTrainConfig(steps=4000, neg_weight=6.0)
 DATA = PedestrianDataConfig()          # paper split: 4202/2795, 160/134
 BATCH_PER_POD = 16384                  # dry-run serving batch (256 chips)

@@ -73,8 +73,88 @@ def cordic_mag_angle(x: Array, y: Array,
     z0 = jnp.zeros_like(x0)
     xf, _, zf = jax.lax.fori_loop(0, iters, body, (x0, y0, z0))
 
+    # on-axis inputs (y == 0) have an exact angle of 0 or 180, but the
+    # iteration leaves a +-atan(2^-14) ~= 0.003 deg residual in z. Signed
+    # output that residual is harmless; the descriptor chain's unsigned
+    # fold (mod 180) flips 180+eps / 0-eps to ~179.997 -> bin 8 instead of
+    # the oracle's bin 0. Pin z exactly on the axis.
+    zf = jnp.where(y == 0, 0.0, zf)
+
     mag = xf / jnp.float32(cordic_gain(iters))
     ang = jnp.where(neg_x, jnp.where(y >= 0, zf + 180.0, zf - 180.0), zf)
     # exact zero input: angle 0, magnitude 0
     both_zero = (x == 0) & (y == 0)
     return jnp.where(both_zero, 0.0, mag), jnp.where(both_zero, 0.0, ang)
+
+
+# ---------------------------------------------------------------------------
+# fixed-point CORDIC -- the numerics="fixed" gradient unit
+# ---------------------------------------------------------------------------
+
+#: angle registers hold degrees in Q16: 1 LSB = 2^-16 deg. 15 LUT entries
+#: stay exact (atan(1) = 45 deg = 0x2D0000) and the total LUT rounding
+#: error is < 15 LSB ~= 0.0002 deg, far inside a 20-deg bin.
+ANG_FRAC_BITS = 16
+ANG_180 = 180 << ANG_FRAC_BITS
+
+ATAN_LUT_FIXED = tuple(int(round(d * (1 << ANG_FRAC_BITS)))
+                       for d in ATAN_LUT_DEG)
+
+#: x/y registers hold gray-level units in Q8 (8 fractional bits): inputs
+#: are integer central differences |fx|,|fy| <= 510, so |x| stays under
+#: 721.2 * gain * 2^8 < 2^19 -- comfortable in int32 with 15 right-shifts.
+MAG_FRAC_BITS = 8
+
+#: fixed-chain magnitudes leave in units of 2 gray levels (see
+#: core/quant.py MAG_SCALE): combined un-gain + Q8 + halving multiplier.
+_INV_GAIN_HALF = 1.0 / (cordic_gain(MAX_ITERS) * (1 << MAG_FRAC_BITS) * 2)
+
+
+@partial(jax.jit, static_argnames=("iters", "bins"))
+def cordic_mag_bin_fixed(fx: Array, fy: Array, iters: int = MAX_ITERS,
+                         bins: int = 9) -> Tuple[Array, Array]:
+    """Integer shift-add CORDIC: (fx, fy) -> (mag_q int32, bin int32).
+
+    The hardware datapath proper: int32 registers, arithmetic right
+    shifts for the 2^-i rotations, Q16-degree angle accumulation, and the
+    unsigned fold + bin divide in integer arithmetic. Inputs must be
+    integer-valued (f32 holding whole gray-level differences is fine).
+
+    mag_q is the CORDIC magnitude rounded to half-gray-level units
+    (<= 361 for 8-bit frames), sized so an 8x8 cell's histogram sum fits
+    int16. bin is the unsigned orientation bin in [0, bins).
+    """
+    xi = jnp.round(fx).astype(jnp.int32)
+    yi = jnp.round(fy).astype(jnp.int32)
+
+    neg_x = xi < 0
+    x = jnp.where(neg_x, -xi, xi) << MAG_FRAC_BITS
+    y = jnp.where(neg_x, -yi, yi) << MAG_FRAC_BITS
+    z = jnp.zeros_like(x)
+
+    lut = jnp.asarray(ATAN_LUT_FIXED[:iters], dtype=jnp.int32)
+
+    def body(i, carry):
+        cx, cy, cz = carry
+        xs = jax.lax.shift_right_arithmetic(cx, i)
+        ys = jax.lax.shift_right_arithmetic(cy, i)
+        d = cy < 0
+        nx = jnp.where(d, cx - ys, cx + ys)
+        ny = jnp.where(d, cy + xs, cy - xs)
+        nz = jnp.where(d, cz - lut[i], cz + lut[i])
+        return nx, ny, nz
+
+    xf, _, zf = jax.lax.fori_loop(0, iters, body, (x, y, z))
+
+    # same on-axis pin as the float path: y == 0 angles are exactly 0/180
+    zf = jnp.where(yi == 0, 0, zf)
+    ang = jnp.where(neg_x, jnp.where(yi >= 0, zf + ANG_180, zf - ANG_180), zf)
+    theta = jnp.mod(ang, ANG_180)                     # [0, 180) in Q16 deg
+    b = jnp.minimum(theta // (ANG_180 // bins), bins - 1).astype(jnp.int32)
+
+    mag_q = jnp.rint(xf.astype(jnp.float32)
+                     * jnp.float32(_INV_GAIN_HALF)).astype(jnp.int32)
+
+    both_zero = (xi == 0) & (yi == 0)
+    return (jnp.where(both_zero, 0, mag_q),
+            jnp.where(both_zero, 0, b))

@@ -73,6 +73,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import numerics as N, quant
 from repro.core.hog import HOGConfig, PAPER_HOG, grayscale
 from repro.core.stages import dense_blocks
 from repro.core.svm import SVMParams
@@ -182,14 +183,35 @@ def score_blocks(blocks: Array, w: Array, b: Array,
     BH, BW, bd = blocks.shape
     ph, pw = BH - bh + 1, BW - bw + 1
     flat = blocks.reshape(BH * BW, bd)
-    wt = w.reshape(bh * bw, bd).T.astype(blocks.dtype)  # (36, 105)
-    if use_kernel:
-        from repro.kernels.svm_matmul import score_matmul
-        contrib = score_matmul(flat, wt)
+    if N.spec_for(cfg).quantized:
+        # fixed mode: the incoming grid is dequantized int8 (exactly
+        # q * scale, numerics.finish_blocks), so requantizing recovers
+        # the codes EXACTLY -- q/127 * max has relative error ~2^-22,
+        # far inside rint's 0.5 margin -- and the one array that flowed
+        # through every stage/tile/shard seam stays the public contract.
+        # int8 x int8 -> int32 is exact, so scores are byte-identical
+        # under any blocking; the rank-1 f32 rescale is elementwise with
+        # a fixed multiply order (quant.rescale_scores).
+        q, s_rows = quant.quantize_blocks(flat)
+        wt = w.reshape(bh * bw, bd).T.astype(jnp.float32)
+        wq, s_cols = quant.quantize_weight_columns(wt)
+        if use_kernel:
+            from repro.kernels.svm_matmul import score_matmul_int8
+            ci = score_matmul_int8(q, wq)
+        else:
+            ci = jax.lax.dot_general(
+                q, wq, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        contrib = quant.rescale_scores(ci, s_rows, s_cols)
     else:
-        contrib = jax.lax.dot_general(
-            flat, wt, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        wt = w.reshape(bh * bw, bd).T.astype(blocks.dtype)  # (36, 105)
+        if use_kernel:
+            from repro.kernels.svm_matmul import score_matmul
+            contrib = score_matmul(flat, wt)
+        else:
+            contrib = jax.lax.dot_general(
+                flat, wt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
     contrib = contrib.reshape(BH, BW, bh * bw)
     out = jnp.zeros((ph, pw), jnp.float32)
     for di in range(bh):                                # static 15x7 unroll

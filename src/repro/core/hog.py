@@ -31,7 +31,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cordic import cordic_mag_angle
+from repro.core import numerics as N
+from repro.core.cordic import cordic_mag_angle, cordic_mag_bin_fixed
 
 Array = jax.Array
 
@@ -52,6 +53,19 @@ class HOGConfig:
     eps: float = 1e-2            # eq. (5) epsilon
     mode: str = "ref"            # "ref" | "cordic" | "sector"
     feat_dtype: str = "f32"      # "f32" | "bf16" descriptor width (§Perf)
+    numerics: str = "float"      # "float" | "fixed" (int8 datapath, §12)
+
+    def __post_init__(self):
+        if self.numerics not in ("float", "fixed"):
+            raise ValueError(
+                f"numerics must be 'float' or 'fixed', got {self.numerics!r}")
+        if self.numerics == "fixed" and self.feat_dtype != "f32":
+            # fixed descriptors are int8-on-a-grid carried as f32; a bf16
+            # recast would round them OFF the grid and break the exact
+            # requantization the scoring path relies on
+            raise ValueError(
+                "numerics='fixed' requires feat_dtype='f32' "
+                f"(got {self.feat_dtype!r})")
 
     @property
     def active_h(self) -> int:   # 128
@@ -178,8 +192,18 @@ def mag_bin_ref_fast(fx: Array, fy: Array, bins: int = 9) -> Tuple[Array, Array]
     return mag_bin_sector(fx, fy, bins)
 
 
+def mag_bin_fixed(fx: Array, fy: Array, bins: int = 9) -> Tuple[Array, Array]:
+    """Fixed-point mode: integer shift-add CORDIC (core/cordic.py).
+
+    Returns int32 magnitudes in half-gray-level units (quant.MAG_SCALE);
+    downstream cell histograms accumulate them in integers and store
+    int16 (numerics.store_hist).
+    """
+    return cordic_mag_bin_fixed(fx, fy, bins=bins)
+
+
 _MAG_BIN = {"ref": mag_bin_ref, "cordic": mag_bin_cordic,
-            "sector": mag_bin_sector}
+            "sector": mag_bin_sector, "fixed": mag_bin_fixed}
 
 #: what the staged pipeline dispatches on: identical to _MAG_BIN except
 #: "ref" takes the transcendental-free fast path (bit-identical bins on
@@ -210,34 +234,28 @@ def cell_histograms(mag: Array, bin_idx: Array, cfg: HOGConfig) -> Array:
     # select fuses into the tree reduction)
     outs = [jnp.sum(jnp.where(bi == k, m, jnp.zeros_like(m)), axis=(-3, -1))
             for k in range(cfg.bins)]
-    return jnp.stack(outs, axis=-1)
+    # fixed chain: int32 accumulate above, int16 store (64 px * 361 max
+    # magnitude = 23104 < 2^15 per cell); float chains pass through
+    return N.store_hist(jnp.stack(outs, axis=-1))
 
 
 # ---------------------------------------------------------------------------
 # stage 5-6: block normalization (eq. 5) + descriptor collation
 # ---------------------------------------------------------------------------
 
-def _nr_rsqrt(x: Array, iters: int = 2) -> Array:
-    """Newton-Raphson reciprocal sqrt, faithful to the hardware unit.
-
-    Seed = the exponent-halving bit manipulation (0x5f3759df), i.e. the
-    integer-datapath seed a hardware rsqrt unit derives before its NR
-    refinement stages; two NR iterations then reach ~1e-6 relative error,
-    matching the paper's Block_NormalizationCore ([3]'s scheme).
-    """
-    xf = x.astype(jnp.float32)
-    i = jax.lax.bitcast_convert_type(xf, jnp.int32)
-    y = jax.lax.bitcast_convert_type(jnp.int32(0x5F3759DF) - (i >> 1),
-                                     jnp.float32)
-    for _ in range(iters):
-        y = y * (1.5 - 0.5 * xf * y * y)
-    return y
+#: back-compat alias -- the canonical NR rsqrt lives in core/numerics.py
+#: so every backend shares one implementation (the PR 6 identity-trap fix)
+_nr_rsqrt = N.nr_rsqrt
 
 
-def block_normalize(hist: Array, cfg: HOGConfig, use_nr: bool = False) -> Array:
+def block_normalize(hist: Array, cfg: HOGConfig, use_nr: bool = False,
+                    norm: str | None = None) -> Array:
     """(..., ch, cw, bins) -> (..., bh, bw, block_dim) L2-normalized blocks.
 
     eq. (5): v_i / sqrt(||v||^2 + eps^2) over each 36-dim block vector.
+    The tail (rsqrt flavor + optional int8 quantize) is
+    numerics.finish_blocks, shared with every Pallas block-norm kernel;
+    `norm` overrides the legacy use_nr flag when given.
     """
     bh, bw = cfg.blocks_hw
     b = cfg.block
@@ -246,9 +264,9 @@ def block_normalize(hist: Array, cfg: HOGConfig, use_nr: bool = False) -> Array:
              for i in range(b) for j in range(b)]
     v = jnp.stack(parts, axis=-2)                    # (..., bh, bw, b*b, bins)
     v = v.reshape(v.shape[:-2] + (cfg.block_dim,))   # (..., bh, bw, 36)
-    ss = jnp.sum(v * v, axis=-1, keepdims=True) + cfg.eps ** 2
-    inv = _nr_rsqrt(ss) if use_nr else jax.lax.rsqrt(ss)
-    out = v * inv
+    if norm is None:
+        norm = "nr" if use_nr else "rsqrt"
+    out = N.finish_blocks(v, cfg.eps, norm)
     if cfg.feat_dtype == "bf16":
         out = out.astype(jnp.bfloat16)   # §Perf: halves descriptor traffic
     return out

@@ -44,6 +44,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import numerics as N
 from repro.core.hog import (HOGConfig, PAPER_HOG, _MAG_BIN_FAST,
                             block_normalize, cell_histograms, gradients,
                             grayscale)
@@ -81,17 +82,11 @@ class StageSet:
 
 # ---------------------------------------------------------------- backends
 
-def _use_nr(cfg: HOGConfig) -> bool:
-    # the paper's Newton-Raphson rsqrt unit belongs to the faithful
-    # (CORDIC) datapath; ref/sector use the native rsqrt
-    return cfg.mode == "cordic"
-
-
-def _kernel_mode(cfg: HOGConfig) -> str:
-    # the kernels implement the two hardware modes; "ref" maps to sector
-    # (bit-identical bins, see tests/test_kernels.py)
-    return "cordic" if cfg.mode == "cordic" else "sector"
-
+# All per-mode choices (mag/bin impl, kernel mode string, rsqrt flavor,
+# quantized datapath) come from ONE table: core/numerics.py SPECS. The
+# scattered _use_nr / _kernel_mode predicates this file used to carry
+# were the PR 6 identity-trap shape -- a new mode could engage NR rsqrt
+# in one backend and fall back to fp32 rsqrt in another.
 
 def _cast_feat(blocks: Array, cfg: HOGConfig) -> Array:
     if cfg.feat_dtype == "bf16" and blocks.dtype != jnp.bfloat16:
@@ -104,7 +99,7 @@ def _ref_grad_mag_bin(gray: Array, cfg: HOGConfig) -> Tuple[Array, Array]:
     # _MAG_BIN_FAST == _MAG_BIN except "ref", whose arctan2 binning is
     # replaced by the bit-compatible sector predicate (hog.py) -- the
     # arctan2 form was ~half the dense hot path's runtime on CPU
-    return _MAG_BIN_FAST[cfg.mode](fx, fy, cfg.bins)
+    return _MAG_BIN_FAST[N.spec_for(cfg).name](fx, fy, cfg.bins)
 
 
 def _ref_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
@@ -112,12 +107,12 @@ def _ref_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
 
 
 def _ref_block_norm(hist: Array, cfg: HOGConfig) -> Array:
-    return block_normalize(hist, cfg, use_nr=_use_nr(cfg))
+    return block_normalize(hist, cfg, norm=N.spec_for(cfg).norm)
 
 
 def _pallas_grad_mag_bin(gray: Array, cfg: HOGConfig) -> Tuple[Array, Array]:
     from repro.kernels.hog_gradient import hog_gradient
-    return hog_gradient(gray, mode=_kernel_mode(cfg))
+    return hog_gradient(gray, mode=N.spec_for(cfg).kernel_mode)
 
 
 def _pallas_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
@@ -128,14 +123,14 @@ def _pallas_cell_hist(mag: Array, b: Array, cfg: HOGConfig) -> Array:
 def _pallas_block_norm(hist: Array, cfg: HOGConfig) -> Array:
     from repro.kernels.block_norm import block_norm
     out = block_norm(hist, block=cfg.block, eps=cfg.eps,
-                     mode=("nr" if _use_nr(cfg) else "rsqrt"))
+                     mode=N.spec_for(cfg).norm)
     return _cast_feat(out, cfg)
 
 
 def _pallas_fused(gray: Array, cfg: HOGConfig) -> Array:
     from repro.kernels.fused_hog import fused_hog
     desc = fused_hog(gray, cell=cfg.cell, block=cfg.block, bins=cfg.bins,
-                     eps=cfg.eps, mode=_kernel_mode(cfg))
+                     eps=cfg.eps, mode=N.spec_for(cfg).kernel_mode)
     bh, bw = cfg.blocks_hw
     return _cast_feat(desc.reshape(desc.shape[0], bh, bw, cfg.block_dim),
                       cfg)
@@ -144,13 +139,13 @@ def _pallas_fused(gray: Array, cfg: HOGConfig) -> Array:
 def _pallas_dense_grad_hist(gray: Array, cfg: HOGConfig) -> Array:
     from repro.kernels.dense_grad_hist import dense_grad_hist
     return dense_grad_hist(gray, cell=cfg.cell, bins=cfg.bins,
-                           mode=_kernel_mode(cfg))
+                           mode=N.spec_for(cfg).kernel_mode)
 
 
 def _pallas_dense_block_norm(hist: Array, cfg: HOGConfig) -> Array:
     from repro.kernels.dense_block_norm import dense_block_norm
     out = dense_block_norm(hist, block=cfg.block, eps=cfg.eps,
-                           mode=("nr" if _use_nr(cfg) else "rsqrt"))
+                           mode=N.spec_for(cfg).norm)
     return _cast_feat(out, cfg)
 
 
@@ -158,7 +153,7 @@ def _pallas_dense_fused(gray: Array, cfg: HOGConfig) -> Array:
     from repro.kernels.fused_hog import dense_fused_hog
     out = dense_fused_hog(gray, cell=cfg.cell, block=cfg.block,
                           bins=cfg.bins, eps=cfg.eps,
-                          mode=_kernel_mode(cfg))
+                          mode=N.spec_for(cfg).kernel_mode)
     return _cast_feat(out, cfg)
 
 
@@ -200,6 +195,14 @@ def run_stages(gray: Array, geom: HOGConfig, backend: str = "ref",
     run the window-layout stages on the scene directly.
     """
     ss = get_backend(backend)
+    if N.spec_for(geom).quantized:
+        # fixed datapath entry: snap gray to whole 8-bit levels HERE, the
+        # one seam every backend/layout/tile shares, so central-difference
+        # gradients are exact integers and the whole chain downstream is
+        # deterministic integer arithmetic (byte-identical under data/
+        # tile sharding). Luma of a uint8 frame is within rounding of
+        # this anyway -- the camera never produced fractional gray.
+        gray = jnp.rint(gray)
     if layout == "dense":
         if ss.dense_fused is not None:
             return ss.dense_fused(gray, geom)

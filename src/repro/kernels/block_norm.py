@@ -17,17 +17,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import numerics as N
 from repro.kernels.common import INTERPRET, cdiv
 
-
-def _nr_rsqrt(x, iters: int = 2):
-    # exponent-halving bit-hack seed (hardware seed LUT) + NR refinement
-    i = jax.lax.bitcast_convert_type(x, jnp.int32)
-    y = jax.lax.bitcast_convert_type(jnp.int32(0x5F3759DF) - (i >> 1),
-                                     jnp.float32)
-    for _ in range(iters):
-        y = y * (1.5 - 0.5 * x * y * y)
-    return y
+#: back-compat alias -- the canonical NR rsqrt (and the whole normalize
+#: tail) lives in core/numerics.py, shared by every backend
+_nr_rsqrt = N.nr_rsqrt
 
 
 def _kernel(hist_ref, out_ref, *, block: int, eps: float, mode: str):
@@ -37,9 +32,8 @@ def _kernel(hist_ref, out_ref, *, block: int, eps: float, mode: str):
     parts = [h[:, i:i + bh, j:j + bw, :]
              for i in range(block) for j in range(block)]
     v = jnp.concatenate(parts, axis=-1)              # (TB, bh, bw, 36)
-    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
-    inv = _nr_rsqrt(ss) if mode == "nr" else jax.lax.rsqrt(ss)
-    out_ref[...] = v * inv
+    # shared normalize tail: rsqrt flavor + int8 quantize for "fixed"
+    out_ref[...] = N.finish_blocks(v, eps, mode)
 
 
 @partial(jax.jit, static_argnames=("block", "eps", "mode", "block_b",

@@ -32,11 +32,14 @@ def _kernel(mag_ref, bin_ref, hist_ref, *, cell: int, bins: int):
     # (TB, ch, py, cw, px)
     m = mag.reshape(tb, ch, cell, cw, cell)
     b = bi.reshape(tb, ch, cell, cw, cell)
-    acc = jnp.zeros((tb, ch, cw, bins), jnp.float32)
+    # fixed chain: int32 magnitudes accumulate exactly, stored int16
+    # (per-cell bound 64 * 361 < 2^15); float chains accumulate f32
+    acc = jnp.zeros((tb, ch, cw, bins), mag.dtype)
+    zero = jnp.zeros((), mag.dtype)
     for k in range(bins):                            # bins is static (9)
-        sel = jnp.where(b == k, m, 0.0)
+        sel = jnp.where(b == k, m, zero)
         acc = acc.at[..., k].set(jnp.sum(sel, axis=(2, 4)))
-    hist_ref[...] = acc
+    hist_ref[...] = acc.astype(hist_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("cell", "bins", "block_b", "interpret"))
@@ -46,6 +49,9 @@ def cell_hist(mag: jax.Array, bin_idx: jax.Array, cell: int = 8,
     B, Ha, Wa = mag.shape
     ch, cw = Ha // cell, Wa // cell
     tb = min(block_b, B)
+    # int32 magnitudes (fixed chain) store int16 histograms
+    out_dtype = jnp.int16 if jnp.issubdtype(mag.dtype, jnp.integer) \
+        else jnp.float32
     return pl.pallas_call(
         partial(_kernel, cell=cell, bins=bins),
         grid=(cdiv(B, tb),),
@@ -54,6 +60,6 @@ def cell_hist(mag: jax.Array, bin_idx: jax.Array, cell: int = 8,
             pl.BlockSpec((tb, Ha, Wa), lambda i: (i, 0, 0)),
         ],
         out_specs=pl.BlockSpec((tb, ch, cw, bins), lambda i: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, ch, cw, bins), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, ch, cw, bins), out_dtype),
         interpret=interpret,
     )(mag, bin_idx)

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import numerics as N
 from repro.kernels.common import INTERPRET, cdiv
-from repro.kernels.block_norm import _nr_rsqrt
 
 
 def _kernel(*refs, block: int, eps: float, mode: str):
@@ -32,9 +32,8 @@ def _kernel(*refs, block: int, eps: float, mode: str):
         for j in range(block):                    # cell-col offset
             parts.append(h[:, :, j:j + bw, :])
     v = jnp.concatenate(parts, axis=-1)           # (1, TR, bw, bd)
-    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
-    inv = _nr_rsqrt(ss) if mode == "nr" else jax.lax.rsqrt(ss)
-    out_ref[...] = v * inv
+    # shared normalize tail: rsqrt flavor + int8 quantize for "fixed"
+    out_ref[...] = N.finish_blocks(v, eps, mode)
 
 
 @partial(jax.jit, static_argnames=("block", "eps", "mode", "row_blocks",

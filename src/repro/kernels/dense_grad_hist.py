@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import INTERPRET, cdiv
-from repro.kernels.hog_gradient import _mag_bin_cordic, _mag_bin_sector
+from repro.kernels.hog_gradient import mag_bin_impl
 
 
 def _kernel(up_ref, mid_ref, dn_ref, hist_ref, *, cell: int, bins: int,
@@ -43,18 +43,18 @@ def _kernel(up_ref, mid_ref, dn_ref, hist_ref, *, cell: int, bins: int,
     tb, rr, gw = fx.shape
     gw = gw // cell * cell                        # trim ragged right edge
     fx, fy = fx[:, :, :gw], fy[:, :, :gw]
-    if mode == "sector":
-        mag, b = _mag_bin_sector(fx, fy)
-    else:
-        mag, b = _mag_bin_cordic(fx, fy)
+    mag, b = mag_bin_impl(mode)(fx, fy)
     tr, cw = rr // cell, gw // cell
     m = mag.reshape(tb, tr, cell, cw, cell)
     bi = b.reshape(tb, tr, cell, cw, cell)
-    acc = jnp.zeros((tb, tr, cw, bins), jnp.float32)
+    # fixed chain accumulates int32, stores int16 (per-cell bound, so
+    # slab height never matters); float chains accumulate f32
+    acc = jnp.zeros((tb, tr, cw, bins), m.dtype)
+    zero = jnp.zeros((), m.dtype)
     for k in range(bins):                         # bins is static (9)
         acc = acc.at[..., k].set(
-            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(2, 4)))
-    hist_ref[...] = acc
+            jnp.sum(jnp.where(bi == k, m, zero), axis=(2, 4)))
+    hist_ref[...] = acc.astype(hist_ref.dtype)
 
 
 @partial(jax.jit, static_argnames=("cell", "bins", "mode", "row_cells",
@@ -74,12 +74,13 @@ def dense_grad_hist(gray: jax.Array, cell: int = 8, bins: int = 9,
     if hp != H:
         gray = jnp.pad(gray, ((0, 0), (0, max(0, hp - H)), (0, 0)))
     rows = tr * cell
+    out_dtype = jnp.int16 if mode == "fixed" else jnp.float32
     out = pl.pallas_call(
         partial(_kernel, cell=cell, bins=bins, mode=mode),
         grid=(B, s),
         in_specs=[pl.BlockSpec((1, rows, W), lambda b, i: (b, i, 0))] * 3,
         out_specs=pl.BlockSpec((1, tr, cw, bins), lambda b, i: (b, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, s * tr, cw, bins), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, s * tr, cw, bins), out_dtype),
         interpret=interpret,
     )(gray[:, 0:hp - 2, :], gray[:, 1:hp - 1, :], gray[:, 2:hp, :])
     return out[:, :ch]

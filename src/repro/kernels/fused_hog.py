@@ -26,9 +26,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import numerics as N
 from repro.kernels.common import INTERPRET, cdiv
-from repro.kernels.hog_gradient import _mag_bin_sector, _mag_bin_cordic
-from repro.kernels.block_norm import _nr_rsqrt
+from repro.kernels.hog_gradient import mag_bin_impl
+
+
+def _norm_flavor(mode: str) -> str:
+    # the normalize tail is a MODE-DERIVED property, not a second ad-hoc
+    # predicate: SPECS is the same table stages.py dispatches on, so the
+    # fused kernels can never disagree with the staged ones about which
+    # rsqrt (or quantizer) a mode uses. This replaces the old
+    # `_nr_rsqrt if mode == "cordic" else rsqrt` inline test that made
+    # NR engagement a fused-kernel-local decision.
+    return N.SPECS[mode].norm
 
 
 def _kernel(gray_ref, desc_ref, *, cell: int, block: int, bins: int,
@@ -40,26 +50,23 @@ def _kernel(gray_ref, desc_ref, *, cell: int, block: int, bins: int,
     ha = (ha // cell) * cell
     wa = (wa // cell) * cell
     fx, fy = fx[:, :ha, :wa], fy[:, :ha, :wa]
-    if mode == "sector":
-        mag, b = _mag_bin_sector(fx, fy)
-    else:
-        mag, b = _mag_bin_cordic(fx, fy)
+    mag, b = mag_bin_impl(mode)(fx, fy)
 
     ch, cw = ha // cell, wa // cell
     m = mag.reshape(tb, ch, cell, cw, cell)
     bi = b.reshape(tb, ch, cell, cw, cell)
-    hist = jnp.zeros((tb, ch, cw, bins), jnp.float32)
+    hist = jnp.zeros((tb, ch, cw, bins), m.dtype)
+    zero = jnp.zeros((), m.dtype)
     for k in range(bins):
         hist = hist.at[..., k].set(
-            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(2, 4)))
+            jnp.sum(jnp.where(bi == k, m, zero), axis=(2, 4)))
+    hist = N.store_hist(hist)
 
     bh, bw = ch - block + 1, cw - block + 1
     parts = [hist[:, i:i + bh, j:j + bw, :]
              for i in range(block) for j in range(block)]
     v = jnp.concatenate(parts, axis=-1)                  # (TB, bh, bw, 36)
-    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
-    inv = _nr_rsqrt(ss) if mode == "cordic" else jax.lax.rsqrt(ss)
-    v = v * inv
+    v = N.finish_blocks(v, eps, _norm_flavor(mode))
     desc_ref[...] = v.reshape(tb, bh * bw * block * block * bins)
 
 
@@ -106,26 +113,23 @@ def _dense_kernel(slab_ref, out_ref, *, cell: int, block: int, bins: int,
     rr, gw = fx.shape
     gw = gw // cell * cell
     fx, fy = fx[:, :gw], fy[:, :gw]
-    if mode == "sector":
-        mag, b = _mag_bin_sector(fx, fy)
-    else:
-        mag, b = _mag_bin_cordic(fx, fy)
+    mag, b = mag_bin_impl(mode)(fx, fy)
 
     cr, cw = rr // cell, gw // cell                      # tr+block-1 cell rows
     m = mag.reshape(cr, cell, cw, cell)
     bi = b.reshape(cr, cell, cw, cell)
-    hist = jnp.zeros((cr, cw, bins), jnp.float32)
+    hist = jnp.zeros((cr, cw, bins), m.dtype)
+    zero = jnp.zeros((), m.dtype)
     for k in range(bins):
         hist = hist.at[..., k].set(
-            jnp.sum(jnp.where(bi == k, m, 0.0), axis=(1, 3)))
+            jnp.sum(jnp.where(bi == k, m, zero), axis=(1, 3)))
+    hist = N.store_hist(hist)
 
     tr, bw = cr - block + 1, cw - block + 1
     parts = [hist[i:i + tr, j:j + bw, :]
              for i in range(block) for j in range(block)]
     v = jnp.concatenate(parts, axis=-1)                  # (tr, bw, bd)
-    ss = jnp.sum(v * v, axis=-1, keepdims=True) + eps * eps
-    inv = _nr_rsqrt(ss) if mode == "cordic" else jax.lax.rsqrt(ss)
-    out_ref[...] = (v * inv)[None]
+    out_ref[...] = N.finish_blocks(v, eps, _norm_flavor(mode))[None]
 
 
 @partial(jax.jit, static_argnames=("cell", "block", "bins", "eps", "mode",

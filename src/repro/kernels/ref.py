@@ -33,7 +33,9 @@ def block_norm_ref(hist, block: int = 2, eps: float = 1e-2,
     cfg = dataclasses.replace(H.PAPER_HOG, window_h=ch * 8 + 2,
                               window_w=cw * 8 + 2, block=block, bins=bins,
                               eps=eps)
-    return H.block_normalize(hist, cfg, use_nr=(mode == "nr"))
+    # mode here is the NORM flavor ("rsqrt" | "nr" | "fixed"), same
+    # vocabulary the block-norm kernels take
+    return H.block_normalize(hist, cfg, norm=mode)
 
 
 def svm_scores_ref(feats, w, bias):
@@ -42,8 +44,10 @@ def svm_scores_ref(feats, w, bias):
 
 def fused_hog_ref(gray, mode: str = "sector"):
     B, Hh, Ww = gray.shape
+    numerics = "fixed" if mode == "fixed" else "float"
     cfg = dataclasses.replace(H.PAPER_HOG, window_h=Hh, window_w=Ww,
-                              mode=mode)
+                              mode="cordic" if mode == "fixed" else mode,
+                              numerics=numerics)
     return H.hog_descriptor(gray, cfg)
 
 

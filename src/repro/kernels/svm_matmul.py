@@ -106,3 +106,47 @@ def score_matmul(flat: jax.Array, wt: jax.Array, block_m: int = 512,
         interpret=interpret,
     )(flat, wt)
     return out[:M, :N]
+
+
+def _score_kernel_i8(x_ref, w_ref, out_ref):
+    out_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("block_m", "interpret"))
+def score_matmul_int8(q: jax.Array, wq: jax.Array, block_m: int = 512,
+                      interpret: bool = INTERPRET) -> jax.Array:
+    """(M, K) int8 block rows @ (K, N) int8 weights -> (M, N) int32.
+
+    The fixed-mode twin of `score_matmul`: codes in [-127, 127] over
+    K = 36 accumulate to at most 36 * 127^2 < 2^20, so the int32 MXU
+    accumulation is EXACT -- which is why quantized scoring is
+    byte-identical under any M blocking, tiling, or sharding (integer
+    adds are associative; there is no rounding to reorder). Padding is
+    zeros, contributing exact 0s. int8 min tile is (32, 128), hence the
+    32-row/col alignment.
+    """
+    M, K = q.shape
+    K2, N = wq.shape
+    assert K == K2, (q.shape, wq.shape)
+    assert q.dtype == jnp.int8 and wq.dtype == jnp.int8, (q.dtype, wq.dtype)
+    Mp = round_up(M, 32)
+    Kp = round_up(K, 32)
+    Np = round_up(N, LANE)
+    tm = min(block_m, Mp)
+    Mp = round_up(Mp, tm)
+    q = jnp.pad(q, ((0, Mp - M), (0, Kp - K)))
+    wq = jnp.pad(wq, ((0, Kp - K), (0, Np - N)))
+    out = pl.pallas_call(
+        _score_kernel_i8,
+        grid=(cdiv(Mp, tm),),
+        in_specs=[
+            pl.BlockSpec((tm, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((Kp, Np), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        interpret=interpret,
+    )(q, wq)
+    return out[:M, :N]

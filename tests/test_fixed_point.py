@@ -1,0 +1,351 @@
+"""Fixed-point (numerics="fixed") datapath tests + the CORDIC 180-degree
+boundary bugfix pin (DESIGN.md §12).
+
+Covers: integer CORDIC bins vs the arctan2 oracle over a dense angle
+sweep (exact bin edges, on-axis and zero-gradient inputs included), the
+quantize/dequantize round-trip bound, int16 histogram overflow headroom
+at the paper window and at UHD slab sizes, per-backend (ref|kernel|fused)
+agreement for the whole fixed chain under the Pallas interpreter, the
+int8 scoring matmul vs a numpy int32 oracle, and mode-dispatch hygiene
+(unknown modes raise everywhere -- the PR 6 "identity trap" guard).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import numerics as N, quant
+from repro.core.cordic import cordic_mag_angle, cordic_mag_bin_fixed
+from repro.core.hog import (HOGConfig, PAPER_HOG, cell_histograms,
+                            mag_bin_cordic, mag_bin_fixed, mag_bin_ref)
+from repro.core.stages import dense_blocks, window_blocks
+from repro.core.detector import score_blocks
+from repro.kernels.hog_gradient import (_mag_bin_fixed as kernel_mag_bin_fixed,
+                                        mag_bin_impl)
+from repro.kernels.svm_matmul import score_matmul_int8
+
+RNG = np.random.default_rng(1234)
+
+FIXED = HOGConfig(mode="cordic", numerics="fixed")
+
+
+def _int_windows(b, h=130, w=66):
+    """Integer-valued gray, the fixed chain's contract (stages rint
+    gray before any kernel sees it)."""
+    return jnp.asarray(RNG.integers(0, 256, size=(b, h, w))
+                       .astype(np.float32))
+
+
+# ------------------------------------------------ CORDIC golden sweep
+# Satellite bugfix: cordic_mag_angle returns signed (-180, 180] angles
+# while the chain bins unsigned [0, 180). For fy == 0 the iteration's
+# +-atan(2^-14) residual used to flip mod(180 + eps, 180) to bin 8
+# where arctan2 says bin 0. The sweep pins every implementation against
+# the oracle, with exact bin-edge and zero-gradient inputs included.
+
+def _dense_gradient_sweep():
+    """Integer (fx, fy) pairs covering a dense angle sweep at several
+    radii, plus exact bin-edge constructions, the axes, and zero."""
+    pts = []
+    for r in (3.0, 17.0, 100.0, 254.0):
+        for t in np.linspace(0.0, 360.0, 721, endpoint=False):
+            pts.append((round(r * math.cos(math.radians(t))),
+                        round(r * math.sin(math.radians(t)))))
+    # exact unsigned-bin edges: tan(20k deg) hits integer ratios only
+    # approximately; include near-edge integer pairs on both sides
+    for k in range(1, 9):
+        t = math.radians(20.0 * k)
+        for r in (50, 200):
+            x = round(r * math.cos(t))
+            for dy in (-1, 0, 1):
+                pts.append((x, round(r * math.sin(t)) + dy))
+    # the axes (the bugfix case) and zero gradient
+    for v in (1, 2, 7, 255, 510):
+        pts += [(v, 0), (-v, 0), (0, v), (0, -v)]
+    pts.append((0, 0))
+    arr = np.array(sorted(set(pts)), np.float32)
+    return jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1])
+
+
+def _edge_tolerant_bin_match(b_test, b_oracle, fx, fy, max_edge_frac=0.02):
+    """Bins must match except for inputs within float rounding of a
+    20-degree boundary, where adjacent bins are acceptable (and rare)."""
+    b_test, b_oracle = np.asarray(b_test), np.asarray(b_oracle)
+    theta = np.degrees(np.arctan2(np.asarray(fy), np.asarray(fx))) % 180.0
+    edge_dist = np.abs((theta + 10.0) % 20.0 - 10.0)
+    mism = b_test != b_oracle
+    # every mismatch sits on a bin edge and is off by exactly one bin
+    # (mod 9: bins 0 and 8 are adjacent across the 0/180 seam)
+    if mism.any():
+        assert (edge_dist[mism] < 0.05).all(), \
+            np.asarray(fx)[mism & (edge_dist >= 0.05)][:10]
+        d = (b_test[mism] - b_oracle[mism]) % 9
+        assert np.isin(d, (1, 8)).all()
+    assert mism.mean() <= max_edge_frac
+
+
+def test_cordic_float_bins_match_oracle_sweep():
+    fx, fy = _dense_gradient_sweep()
+    mag_c, b_c = mag_bin_cordic(fx, fy)
+    mag_r, b_r = mag_bin_ref(fx, fy)
+    _edge_tolerant_bin_match(b_c, b_r, fx, fy)
+    np.testing.assert_allclose(mag_c, mag_r, rtol=1e-4, atol=1e-3)
+
+
+def test_cordic_fixed_bins_match_oracle_sweep():
+    fx, fy = _dense_gradient_sweep()
+    mag_q, b_f = mag_bin_fixed(fx, fy)
+    mag_r, b_r = mag_bin_ref(fx, fy)
+    _edge_tolerant_bin_match(b_f, b_r, fx, fy)
+    # mag_q holds half-gray units, rounded: |2*mag_q - mag| <= 1 + CORDIC err
+    np.testing.assert_allclose(2.0 * np.asarray(mag_q), mag_r,
+                               rtol=1e-3, atol=1.1)
+
+
+def test_cordic_on_axis_pin():
+    """fy == 0 must bin to 0 (angle exactly 0 or 180 folds to 0), never
+    to 8 -- in the float CORDIC, the integer CORDIC, and the kernels."""
+    fx = jnp.asarray([1., -1., 7., -7., 255., -255., 510., -510.])
+    fy = jnp.zeros_like(fx)
+    for impl in (mag_bin_cordic, mag_bin_fixed,
+                 mag_bin_impl("cordic"), mag_bin_impl("fixed")):
+        _, b = impl(fx, fy)
+        assert int(jnp.sum(b != 0)) == 0, impl
+
+    # zero gradient: mag 0, bin 0
+    zero = jnp.zeros((4,), jnp.float32)
+    for impl in (mag_bin_cordic, mag_bin_fixed):
+        m, b = impl(zero, zero)
+        assert int(jnp.sum(b != 0)) == 0 and float(jnp.sum(jnp.abs(m))) == 0
+
+    # signed-angle contract unchanged: cordic_mag_angle still returns
+    # exactly 0 / +-180 on the axis (the pin, not a new fold)
+    mag, ang = cordic_mag_angle(fx, fy)
+    np.testing.assert_allclose(np.abs(ang) % 180.0, 0.0, atol=0)
+    np.testing.assert_allclose(mag, np.abs(np.asarray(fx)), rtol=1e-4)
+
+
+def test_fixed_core_and_kernel_impls_bit_identical():
+    fx, fy = _dense_gradient_sweep()
+    m_core, b_core = cordic_mag_bin_fixed(fx, fy)
+    m_kern, b_kern = kernel_mag_bin_fixed(fx, fy)
+    assert jnp.array_equal(m_core, m_kern)
+    assert jnp.array_equal(b_core, b_kern)
+
+
+# ------------------------------------------------- quantizer properties
+
+def _roundtrip_bound(v):
+    q, scale = quant.quantize_blocks(v)
+    back = quant.dequantize_blocks(q, scale)
+    # per-block bound: |back - v| <= scale/2 (rint) with scale = max/127
+    err = np.abs(np.asarray(back) - np.asarray(v))
+    bound = np.asarray(scale)[..., None] * 0.5 + 1e-7
+    assert (err <= bound).all()
+    assert np.abs(np.asarray(q)).max() <= 127
+
+
+def test_quantize_roundtrip_bound_seeded():
+    _roundtrip_bound(jnp.asarray(RNG.random((50, 36)).astype(np.float32)))
+    _roundtrip_bound(jnp.asarray(
+        RNG.normal(0, 3.0, (20, 7, 36)).astype(np.float32)))
+    # zero blocks: scale 0, exact zeros back
+    z = jnp.zeros((3, 36))
+    q, s = quant.quantize_blocks(z)
+    assert float(jnp.sum(jnp.abs(quant.dequantize_blocks(q, s)))) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 99))
+def test_quantize_roundtrip_bound_property(n, scale, seed):
+    r = np.random.default_rng(seed)
+    _roundtrip_bound(jnp.asarray((r.random((n, 36)) * scale)
+                                 .astype(np.float32)))
+
+
+def test_quantize_code_recovery_exact():
+    """Requantizing a dequantized grid recovers the int8 codes EXACTLY
+    -- the property score_blocks relies on to requantize the public f32
+    block grid instead of threading (q, scale) through every seam."""
+    v = jnp.asarray(RNG.random((200, 36)).astype(np.float32))
+    q, s = quant.quantize_blocks(v)
+    back = quant.dequantize_blocks(q, s)
+    q2, s2 = quant.quantize_blocks(back)
+    assert jnp.array_equal(q, q2)
+    np.testing.assert_allclose(s2, s, rtol=1e-6)
+
+
+# --------------------------------------------- int16 histogram headroom
+
+def test_int16_hist_never_overflows_worst_case():
+    """Worst representable cell: every pixel at the max quantized
+    magnitude. 8-bit gray bounds |fx|,|fy| <= 255, so mag_q <= 181
+    half-units; even the loose |fx|,|fy| <= 510 bound gives 361 and
+    64 * 361 = 23104 < 2^15. The bound is PER CELL, so slab and frame
+    size never enter."""
+    worst = int(jnp.rint(jnp.sqrt(510.0 ** 2 + 510.0 ** 2) / 2))
+    assert worst == 361 and 64 * worst < 2 ** 15
+    mag = jnp.full((1, 128, 64), worst, jnp.int32)
+    bins = jnp.zeros((1, 128, 64), jnp.int32)
+    hist = cell_histograms(mag, bins, PAPER_HOG)
+    assert hist.dtype == jnp.int16
+    assert int(hist[..., 0].min()) == 64 * worst  # no wraparound
+
+
+def test_int16_hist_exact_at_uhd_slab():
+    """Max-contrast checkerboard through the dense fixed chain at a UHD
+    slab width: kernel int16 histograms equal the ref integer sums
+    exactly (any overflow would wrap and break equality)."""
+    from repro.kernels.dense_grad_hist import dense_grad_hist
+    h, w = 130, 3842                       # one UHD-width slab + border
+    yy, xx = np.mgrid[0:h, 0:w]
+    gray = jnp.asarray((((yy // 2 + xx // 2) % 2) * 255).astype(np.float32))
+    hist_k = dense_grad_hist(gray[None], mode="fixed")
+    assert hist_k.dtype == jnp.int16
+    geom = dataclasses.replace(FIXED, window_h=h, window_w=w)
+    from repro.core.hog import gradients, _MAG_BIN_FAST
+    fx, fy = gradients(gray[None])
+    gw = (w - 2) // 8 * 8
+    m, b = _MAG_BIN_FAST["fixed"](fx[..., :gw], fy[..., :gw], 9)
+    hist_r = cell_histograms(m, b, dataclasses.replace(geom, window_w=gw + 2))
+    assert jnp.array_equal(hist_k, hist_r.astype(jnp.int16))
+    assert int(hist_r.max()) < 2 ** 15     # genuine headroom, not luck
+
+
+# ------------------------------------- whole chain, per backend/layout
+
+def _assert_fixed_close(k, r):
+    """Backends agree up to ONE int8 code step per element. The f32
+    sum-of-squares before the quantizer rounds differently per
+    compilation context (v^2 reaches ~5e8 > 2^24), so a value sitting
+    exactly on a rint boundary may flip by one code -- the same
+    cross-backend property the float modes have, expressed on the code
+    grid. Flips must be rare and never exceed one step."""
+    k, r = np.asarray(k), np.asarray(r)
+    step = np.abs(r).max(-1, keepdims=True) * np.float32(1 / 127)
+    diff = np.abs(k - r)
+    assert (diff <= step + 1e-6).all()
+    assert (diff > 1e-6).mean() < 1e-3    # boundary flips are rare
+
+
+@pytest.mark.parametrize("backend", ["kernel", "fused"])
+def test_fixed_chain_window_backends_allclose(backend):
+    win = _int_windows(3)
+    r = window_blocks(win, FIXED, backend="ref")
+    k = window_blocks(win, FIXED, backend=backend)
+    assert r.dtype == k.dtype == jnp.float32
+    _assert_fixed_close(k, r)
+
+
+@pytest.mark.parametrize("backend", ["kernel", "fused"])
+def test_fixed_chain_dense_backends_allclose(backend):
+    scene = _int_windows(1, 240, 320)[0]
+    r = dense_blocks(scene, FIXED, backend="ref")
+    k = dense_blocks(scene, FIXED, backend=backend)
+    _assert_fixed_close(k, r)
+
+
+@pytest.mark.parametrize("backend", ["ref", "kernel", "fused"])
+def test_fixed_chain_output_is_on_int8_grid(backend):
+    """Every backend's fixed output must BE quantized: each block vector
+    scaled to code range must hit integers. A backend that silently fell
+    back to the fp32 normalize tail (the identity-trap class this PR's
+    shared dispatch kills) fails this immediately."""
+    win = _int_windows(2)
+    out = np.asarray(window_blocks(win, FIXED, backend=backend))
+    v = out.reshape(-1, 36)
+    m = np.abs(v).max(axis=-1, keepdims=True)
+    codes = v * (127.0 / np.where(m > 0, m, 1.0))
+    assert np.abs(codes - np.rint(codes)).max() < 1e-3
+
+
+def test_fixed_differs_from_float_but_close():
+    """fixed is a real datapath change (quantization must show up) yet
+    descriptor-level close to the float chain."""
+    win = _int_windows(2)
+    f32 = window_blocks(win, dataclasses.replace(FIXED, numerics="float"),
+                        backend="ref")
+    fxd = window_blocks(win, FIXED, backend="ref")
+    diff = float(jnp.abs(f32 - fxd).max())
+    assert 0 < diff < 0.02                 # ~ max block scale / 2
+
+
+# ----------------------------------------------------- int8 scoring
+
+def test_score_matmul_int8_matches_numpy_oracle():
+    q = jnp.asarray(RNG.integers(-127, 128, size=(100, 36), dtype=np.int8))
+    wq = jnp.asarray(RNG.integers(-127, 128, size=(36, 105), dtype=np.int8))
+    out = score_matmul_int8(q, wq)
+    oracle = np.asarray(q, np.int32) @ np.asarray(wq, np.int32)
+    assert out.dtype == jnp.int32
+    assert np.array_equal(np.asarray(out), oracle)
+
+
+def test_score_matmul_int8_blocking_invariant():
+    """Exact int32 accumulation: every M blocking gives identical bytes
+    (the property that makes fixed-mode scoring shard-invariant)."""
+    q = jnp.asarray(RNG.integers(-127, 128, size=(300, 36), dtype=np.int8))
+    wq = jnp.asarray(RNG.integers(-127, 128, size=(36, 105), dtype=np.int8))
+    full = score_matmul_int8(q, wq)
+    for bm in (32, 64, 128):
+        assert jnp.array_equal(score_matmul_int8(q, wq, block_m=bm), full)
+
+
+def test_score_blocks_fixed_kernel_vs_xla_identical():
+    """The int8 path's Pallas kernel and lax.dot_general forms agree to
+    the byte (integer matmul + identical elementwise rescale)."""
+    scene = _int_windows(1, 200, 150)[0]
+    blocks = dense_blocks(scene, FIXED, backend="ref")
+    w = jnp.asarray(RNG.normal(0, 0.05, size=3780).astype(np.float32))
+    b = jnp.float32(-0.2)
+    s_xla = score_blocks(blocks, w, b, FIXED, use_kernel=False)
+    s_pal = score_blocks(blocks, w, b, FIXED, use_kernel=True)
+    assert jnp.array_equal(s_xla, s_pal)
+    assert bool(jnp.all(jnp.isfinite(s_xla)))
+
+
+def test_quant_preset_detector_smoke():
+    from repro.api.config import presets
+    from repro.core.detector import FrameDetector
+    cfg = presets("quant")
+    assert cfg.hog.numerics == "fixed"
+    svm = {"w": jnp.asarray(RNG.normal(0, .05, 3780).astype(np.float32)),
+           "b": jnp.float32(-0.1)}
+    det = FrameDetector(svm, cfg.detector)
+    frame = RNG.integers(0, 256, (160, 120, 3)).astype(np.uint8)
+    dets = det(frame)
+    assert isinstance(dets, list)
+    # round-trips through JSON like every preset
+    from repro.api.config import PipelineConfig
+    assert PipelineConfig.from_json(cfg.to_json()) == cfg
+
+
+# ------------------------------------------------- dispatch hygiene
+
+def test_unknown_modes_raise_everywhere():
+    with pytest.raises(ValueError, match="numerics"):
+        HOGConfig(numerics="int4")
+    with pytest.raises(ValueError, match="feat_dtype"):
+        HOGConfig(numerics="fixed", feat_dtype="bf16")
+    with pytest.raises(ValueError, match="unknown"):
+        N.spec_for(dataclasses.replace(PAPER_HOG, mode="bogus"))
+    with pytest.raises(ValueError, match="unknown"):
+        mag_bin_impl("bogus")
+    with pytest.raises(ValueError, match="unknown"):
+        N.finish_blocks(jnp.ones((2, 36)), 1e-2, "bogus")
+
+
+def test_spec_table_is_single_source():
+    """numerics="fixed" overrides cfg.mode; float modes map to their
+    historical kernel/norm choices."""
+    assert N.spec_for(FIXED).name == "fixed"
+    assert N.spec_for(FIXED).quantized
+    assert N.spec_for(HOGConfig(mode="cordic")).norm == "nr"
+    assert N.spec_for(HOGConfig(mode="sector")).norm == "rsqrt"
+    assert N.spec_for(HOGConfig(mode="ref")).kernel_mode == "sector"
+    for spec in N.SPECS.values():
+        assert spec.norm in N.NORM_RSQRT

@@ -194,6 +194,26 @@ def test_sharded_matches_single_device_nondivisible(backend, mode):
 
 
 @multi
+def test_sharded_matches_single_device_fixed_numerics():
+    """numerics="fixed" (int8 chain) over the data mesh: the integer
+    CORDIC / int16 histograms / int8 matmul make every per-window value
+    independent of batch placement, so the sharded path must match the
+    single-device path byte for byte -- divisible AND pad-and-mask."""
+    from repro.configs import hog_svm
+    base = DetectorConfig(hog=hog_svm.QUANT, score_threshold=-10.0,
+                          scales=(1.0, 0.8), backend="ref", batch_chunk=1)
+    for n_frames in (jax.device_count(), jax.device_count() + 3):
+        frames = _frames(n_frames)
+        single = FrameDetector(SVM, dataclasses.replace(base,
+                                                        data_parallel=1))
+        shard = FrameDetector(SVM, dataclasses.replace(base,
+                                                       data_parallel=0))
+        want = single.detect_batch_raw(frames)
+        got = shard.detect_batch_raw(frames)
+        assert got.to_list() == want.to_list()          # byte-identical
+
+
+@multi
 def test_sharded_matches_single_device_wide_vmap_schedule():
     """Same equivalence under the wide-vmap per-device schedule
     (chunk >= local batch) instead of the frame-by-frame scan."""

@@ -199,6 +199,29 @@ def test_tiled_matches_untiled(resize, mode, fp):
 
 
 @multi
+@pytest.mark.parametrize("mode,fp", [("slab", 2), ("scale", 2)])
+def test_tiled_matches_untiled_fixed_numerics(mode, fp):
+    """numerics="fixed" across the tile mesh: slab halos recompute the
+    same integer gradients/histograms bit for bit and the int8 scoring
+    matmul is associative in int32, so tiled-vs-untiled must be
+    byte-identical in BOTH tile modes -- the quantized chain has no
+    float-summation-order escape hatch."""
+    if fp > jax.device_count():
+        pytest.skip(f"needs {fp} devices")
+    from repro.configs import hog_svm
+    base = DetectorConfig(hog=hog_svm.QUANT, score_threshold=-5.0,
+                          scales=(1.0, 0.8), pyramid_resize="banded")
+    frame = _frame()
+    plain = FrameDetector(SVM, base)
+    tiled = FrameDetector(SVM, dataclasses.replace(
+        base, frame_parallel=fp, tile_mode=mode))
+    want = plain.detect_raw(frame).to_list()
+    got = tiled.detect_raw(frame).to_list()
+    assert want, "threshold must admit boxes or the test is vacuous"
+    assert got == want
+
+
+@multi
 def test_tiled_slab_overhang_tiles_are_masked():
     """fp larger than the smallest score grid: at 160x128/scale 1.0 the
     grid has 5 score rows, so with fp=8 several tiles own only
