@@ -889,6 +889,248 @@ def run_quant(fast: bool = False) -> dict:
     return row
 
 
+# ------------------------------------------------- multi-head stacking
+# K classifiers in ONE compiled program (DESIGN.md §13): the dense
+# contribution matmul widens from (M, 36) @ (36, 105) to
+# (M, 36) @ (36, 105*K). On the MXU that widening is near-free (same M
+# rows, same reduction dim); on this CPU host the scoring FLOPs scale
+# with K, so the gate bounds the MARGINAL cost: each extra head must
+# add < 15% of a full single-head pass at 640x480 (the naive
+# alternative -- one program per class -- adds 100% per head; measured
+# here the widened matmul adds ~9%). Plus the correctness gate: head 0
+# of the stack byte-identical to the single-head program (scores /
+# index / keep / n_valid arrays).
+
+def run_multiclass(fast: bool = False) -> dict:
+    K = 4
+    rng = np.random.default_rng(0)
+    h, w = 480, 640
+    cfg = DetectorConfig(scales=(1.0, 0.8, 0.64))
+    F = cfg.hog.n_features
+    ws = rng.normal(0, 0.01, size=(K, F)).astype(np.float32)
+    bs = rng.normal(0, 0.1, size=(K,)).astype(np.float32)
+    det1 = FrameDetector({"w": ws[0], "b": bs[0]}, cfg)
+    detK = FrameDetector({"w": ws, "b": bs}, cfg,
+                         classes=tuple(f"head{k}" for k in range(K)))
+    frame = rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+
+    r1 = det1.detect_raw(frame)                  # compiles both programs
+    rK = detK.detect_raw(frame)
+    same = all(bool(jnp.array_equal(a, b)) for a, b in [
+        (r1._scores, rK._scores[0]), (r1._index, rK._index[0]),
+        (r1._keep, rK._keep[0]), (r1._n_valid, rK._n_valid[0])])
+
+    iters = 4 if fast else 10
+    t1 = _time_dist(lambda: det1.detect_raw(frame).block_until_ready(),
+                    iters=iters, warmup=1)
+    tK = _time_dist(lambda: detK.detect_raw(frame).block_until_ready(),
+                    iters=iters, warmup=1)
+    overhead = (tK["min_ms"] - t1["min_ms"]) / t1["min_ms"]
+    per_head = overhead / (K - 1)
+    ok = same and per_head < 0.15
+    row = {"frame": f"{w}x{h}", "heads": K,
+           "single_head": t1, "stacked": tK,
+           "overhead_pct": overhead * 100.0,
+           "per_head_overhead_pct": per_head * 100.0,
+           "head0_byte_identical": bool(same), "ok": bool(ok)}
+    print(f"# multi-head -- K={K} stacked heads vs one (one widened matmul)")
+    print(f"multiclass/{w}x{h}_single_ms,{t1['min_ms']:.2f},1 head")
+    print(f"multiclass/{w}x{h}_stacked_ms,{tK['min_ms']:.2f},{K} heads")
+    print(f"multiclass/{w}x{h}_overhead_pct,{overhead*100:.2f},"
+          f"{K-1} extra heads")
+    print(f"multiclass/{w}x{h}_per_head_overhead_pct,{per_head*100:.2f},"
+          f"gate<15% (naive one-program-per-class = 100)")
+    print(f"multiclass/head0_byte_identical,{same},gate=True")
+    _update_bench(multiclass=row)
+    print(f"multiclass/json,{BENCH_JSON.name},written")
+    return row
+
+
+# --------------------------------------------------- two-stage cascade
+# The coarse-reject scheduler (core/cascade.py) on the traffic shape it
+# is built for: 640x480 frames where pedestrians cluster, individually
+# visible, in one corner of an otherwise empty frame, mixed 1:1 with
+# fully empty frames. Both heads train with hard-negative bootstrapping
+# (data/mining.py) -- the synthetic domain's dense score field is
+# meaningless without it -- then both stage thresholds are CALIBRATED
+# on held-out scenes, the way a deployment sets them on validation
+# traffic: the fine gate clears the empty-scene score ceiling (so
+# full-pass detections are pedestrian neighbourhoods, not background
+# noise), and the coarse gate sits as high as empty-scene quiet allows
+# while staying under every calibration pedestrian's coarse score.
+# The coarse stage sweeps ONE scale (0.5: the 66x34 head sees exactly
+# the 130x66 pedestrians this traffic contains) -- on the CPU host each
+# extra pyramid level costs ~2ms of op-dispatch regardless of its pixel
+# count, so the single-scale sweep is what makes the coarse stage pay
+# for itself; general traffic with unknown person sizes would keep the
+# multi-scale default. Region crops run with a score-hysteresis band
+# (CascadeConfig.fine_hysteresis) to absorb crop-grid resampling
+# jitter. Gates: the cascade retains >= 99% of the full dense pass's
+# detections (matched by IoU >= 0.5, same class, or by covering the
+# same ground-truth pedestrian) AND runs >= 1.5x faster over the mix.
+
+def run_cascade(fast: bool = False) -> dict:
+    import dataclasses
+
+    from repro.api import DetectionSession, presets
+    from repro.core.cascade import CascadeDetector, coarse_detector
+    from repro.data.synth_pedestrian import make_scene
+
+    rng = np.random.default_rng(0)
+    h, w = 480, 640
+    n_pos, n_neg = (800, 550) if fast else (1200, 800)
+    cfg = presets("cascade")
+    sess = DetectionSession.train(cfg, n_pos=n_pos, n_neg=n_neg, rng=rng,
+                                  hard_negative_rounds=2,
+                                  mine_scenes=10 if fast else 16)
+    coarse_svm = sess.cascade(rng=rng).coarse.svm     # train coarse once
+
+    def _iou(a, b):
+        y0, x0 = max(a[0], b[0]), max(a[1], b[1])
+        y1, x1 = min(a[2], b[2]), min(a[3], b[3])
+        inter = max(0.0, y1 - y0) * max(0.0, x1 - x0)
+        ua = ((a[2] - a[0]) * (a[3] - a[1])
+              + (b[2] - b[0]) * (b[3] - b[1]) - inter)
+        return inter / (ua + 1e-9)
+
+    def _clustered(r):
+        # clustered but individually visible: rejection-sample until
+        # the pasted pedestrians do not overlap each other
+        for _ in range(50):
+            s, t = make_scene(r, h, w, n_people=2, region=(0, 0, 320, 320))
+            bs = [(y, x, y + hh, x + ww) for y, x, hh, ww in t]
+            if all(_iou(a, b) < 0.05
+                   for i, a in enumerate(bs) for b in bs[i + 1:]):
+                return s, t
+        return s, t
+
+    base_ccfg = dataclasses.replace(cfg.cascade, coarse_scales=(0.5,),
+                                    margin=96, max_regions=2,
+                                    fine_hysteresis=1.5)
+
+    # ------------- threshold calibration on held-out validation scenes
+    loose_f = FrameDetector(sess.svm, dataclasses.replace(
+        cfg.detector, score_threshold=0.0))
+    loose_c = coarse_detector(coarse_svm, cfg.detector,
+                              dataclasses.replace(base_ccfg,
+                                                  coarse_threshold=-2.0))
+    cal = np.random.default_rng(5000)
+    f_ceiling = c_ceiling = 0.0
+    for _ in range(4):
+        scene, _ = make_scene(cal, h, w, n_people=0)
+        f_ceiling = max([f_ceiling] + [d["score"] for d in
+                                       loose_f.detect_raw(scene).to_list()])
+        c_ceiling = max([c_ceiling] + [d["score"] for d in
+                                       loose_c.detect_raw(scene).to_list()])
+    person_c = []                  # coarse score at each calibration person
+    for _ in range(3):
+        scene, truth = _clustered(cal)
+        hits = loose_c.detect_raw(scene).to_list()
+        for (ty, tx, th_, tw) in truth:
+            t = (ty, tx, ty + th_, tx + tw)
+            person_c.append(max(
+                (d["score"] for d in hits if _iou(d["box"], t) > 0.1),
+                default=-2.0))
+    fthr = f_ceiling + 1.0
+    cthr = min(c_ceiling + 0.25, min(person_c) - 0.1)
+    det_cfg = dataclasses.replace(cfg.detector, score_threshold=float(fthr))
+    ccfg = dataclasses.replace(base_ccfg, coarse_threshold=float(cthr))
+    fine = FrameDetector(sess.svm, det_cfg)
+    casc = CascadeDetector(fine, coarse_detector(coarse_svm, det_cfg, ccfg),
+                           ccfg)
+    print(f"cascade/calibrated,fine_thr={fthr:.2f},coarse_thr={cthr:.2f}")
+
+    n_clustered = 3 if fast else 6
+    pairs = [_clustered(rng) for _ in range(n_clustered)]
+    pairs += [make_scene(rng, h, w, n_people=0)
+              for _ in range(n_clustered)]  # empty serving traffic
+    scenes = [p[0] for p in pairs]
+
+    # correctness pass (doubles as compile warmup for every region
+    # bucket the deterministic cascade will hit again under timing).
+    # The gate covers TRUE detections -- full-pass detections that match
+    # a ground-truth pedestrian (IoU >= 0.4), the same universe the
+    # core/cascade.py retention unit test uses: one counts as retained
+    # when a cascade detection matches it directly (IoU >= 0.5, same
+    # class) OR reports the same ground-truth pedestrian (region-local
+    # NMS may keep a slightly shifted box for the same object). The
+    # synthetic domain's paste-edge halo detections (no ground-truth
+    # match) are tracked separately as fp_detections/fp_kept.
+    kept = total = fp_kept = fp_total = 0
+    for scene, truth in pairs:
+        full = fine.detect_raw(scene).to_list()
+        cd = casc.detect(scene)
+        tboxes = [(ty, tx, ty + hh, tx + ww) for ty, tx, hh, ww in truth]
+
+        def _gt(d):
+            return max(range(len(tboxes)), default=None,
+                       key=lambda i: _iou(d["box"], tboxes[i])) \
+                if any(_iou(d["box"], tb) >= 0.4 for tb in tboxes) else None
+
+        for f in full:
+            same_box = any(_iou(f["box"], c["box"]) >= 0.5
+                           and f.get("class_id") == c.get("class_id")
+                           for c in cd)
+            gt = _gt(f)
+            same_person = gt is not None and any(
+                _gt(c) == gt and f.get("class_id") == c.get("class_id")
+                for c in cd)
+            got = bool(same_box or same_person)
+            if gt is not None:
+                total += 1
+                kept += got
+                if not got:
+                    print(f"cascade/lost,"
+                          f"{[round(v, 1) for v in f['box']]},"
+                          f"score={f['score']:.1f}")
+            else:
+                fp_total += 1
+                fp_kept += got
+    retention = kept / total if total else 0.0
+    area_frac = casc.stats["region_area_frac"] / max(1, casc.stats["frames"])
+
+    def _full():
+        for scene in scenes:
+            fine.detect_raw(scene).to_list()
+
+    def _casc():
+        for scene in scenes:
+            casc.detect(scene)
+
+    iters = 2 if fast else 4
+    t_full = _time_dist(_full, iters=iters, warmup=1)
+    t_casc = _time_dist(_casc, iters=iters, warmup=0)
+    speedup = t_full["min_ms"] / t_casc["min_ms"]
+    ok = total > 0 and retention >= 0.99 and speedup >= 1.5
+    n = len(scenes)
+    row = {"frame": f"{w}x{h}", "scenes": n,
+           "clustered": n_clustered, "empty": n - n_clustered,
+           "train": {"n_pos": n_pos, "n_neg": n_neg},
+           "calibrated": {"fine_threshold": float(fthr),
+                          "coarse_threshold": float(cthr)},
+           "full_ms_per_frame": t_full["min_ms"] / n,
+           "cascade_ms_per_frame": t_casc["min_ms"] / n,
+           "speedup": speedup, "retention": retention,
+           "detections_full": int(total), "detections_kept": int(kept),
+           "fp_detections": int(fp_total), "fp_kept": int(fp_kept),
+           "region_area_frac": area_frac, "ok": bool(ok)}
+    print("# cascade -- coarse reject + fine-on-regions vs full dense pass")
+    print(f"cascade/{w}x{h}_full_ms,{t_full['min_ms']/n:.1f},"
+          f"dense per frame over {n}-frame mix")
+    print(f"cascade/{w}x{h}_cascade_ms,{t_casc['min_ms']/n:.1f},"
+          f"two-stage per frame")
+    print(f"cascade/{w}x{h}_speedup,{speedup:.2f},gate>=1.5")
+    print(f"cascade/retention,{retention:.3f},{kept}/{total} "
+          f"truth-matched,gate>=0.99")
+    print(f"cascade/fp_retained,{fp_kept}/{fp_total},"
+          f"paste-edge halos (informational)")
+    print(f"cascade/region_area_frac,{area_frac:.3f},"
+          f"fine-stage pixel fraction")
+    _update_bench(cascade=row)
+    print(f"cascade/json,{BENCH_JSON.name},written")
+    return row
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -919,11 +1161,26 @@ if __name__ == "__main__":
                          "section (int8-vs-bf16 scoring, quant-vs-perf "
                          "e2e ms/frame); exits 1 when the fixed chain's "
                          "ref and fused backends disagree")
+    ap.add_argument("--multiclass", action="store_true",
+                    help="measure + record the K=4 stacked-heads "
+                         "section; exits 1 when the stacking overhead "
+                         "tops 15%% or head 0 of the stack is not "
+                         "byte-identical to the single-head program")
+    ap.add_argument("--cascade", action="store_true",
+                    help="measure + record the two-stage cascade "
+                         "section (retention + speedup vs the full "
+                         "dense pass on the synthetic clustered/empty "
+                         "mix); exits 1 when retention < 0.99 or "
+                         "speedup < 1.5")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="--check: allowed regression fraction "
                          "(default 0.15 = 15%%)")
     a = ap.parse_args()
-    if a.quant:
+    if a.multiclass:
+        sys.exit(0 if run_multiclass(fast=a.fast)["ok"] else 1)
+    elif a.cascade:
+        sys.exit(0 if run_cascade(fast=a.fast)["ok"] else 1)
+    elif a.quant:
         sys.exit(0 if run_quant(fast=a.fast)["ok"] else 1)
     elif a.uhd:
         sys.exit(0 if run_uhd(fast=a.fast)["ok"] else 1)

@@ -6,7 +6,12 @@
 4. evaluate Table I accuracy,
 5. run the multi-scale sliding-window detector on a scene through the
    unified api (`repro.api.DetectionSession` -- the paper's one-command
-   co-processor interface; "future development" §VI).
+   co-processor interface; "future development" §VI),
+6. the multi-workload layer (DESIGN.md §13): named SVM heads stacked
+   into ONE widened scoring matmul (`HeadRegistry`, per-class NMS and
+   thresholds, `detect(classes=...)`), and the two-stage cascade --
+   a half-resolution coarse head rejects empty neighbourhoods so the
+   dense chain only runs on promoted crops (`session.cascade()`).
 
 The same session serves every other path too:
 
@@ -35,7 +40,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import DetectionSession, PipelineConfig
+from repro.api import DetectionSession, HeadRegistry, PipelineConfig
 from repro.core import (DetectorConfig, PAPER_HOG, accuracy_table,
                         hog_descriptor, train_svm)
 from repro.core.svm import SVMTrainConfig
@@ -74,7 +79,7 @@ def main():
     print(f"      total          {acc['total_acc']*100:.2f}%  "
           f"(paper 84.35%)")
 
-    print("[5/5] multi-scale detection on a 320x240 scene "
+    print("[5/6] multi-scale detection on a 320x240 scene "
           "(DetectionSession) ...")
     session = DetectionSession(params, PipelineConfig(
         detector=DetectorConfig(score_threshold=0.5)))
@@ -93,6 +98,36 @@ def main():
         # with max_detections=0 (the default) K scales with the window
         # grid, so this only fires on an explicit, too-small override
         print("      (top-k saturated: raise detector.max_detections)")
+
+    print("[6/6] multi-head registry + two-stage cascade "
+          "(DESIGN.md §13) ...")
+    # K named heads -> ONE widened (36, 105*K) scoring matmul. The
+    # second head reuses the pedestrian params under a stricter gate --
+    # a stand-in for a separately trained class (vehicle, custom).
+    registry = HeadRegistry()
+    registry.add("pedestrian", params, threshold=3.0)
+    registry.add("pedestrian_strict", params, threshold=6.0)
+    multi = DetectionSession(registry, session.config)
+    # a sparser 480x640 scene: people confined to one corner, so the
+    # cascade has background to reject
+    sparse, _ = make_scene(rng, 480, 640, n_people=2,
+                           region=(0, 0, 260, 260))
+    for d in multi.detect(sparse).to_list()[:4]:
+        print(f"      {d['label']:<18} (class {d['class_id']}) "
+              f"score={d['score']:.2f}")
+    # cascade: the 66x34 coarse head sweeps the frame at a loose
+    # threshold; only its hit neighbourhoods run the dense chain
+    coarse_svm = None
+    if args.fast:                # smaller coarse training split
+        from repro.core.cascade import train_coarse_head
+        coarse_svm, _ = train_coarse_head(
+            multi.config.hog, SVMTrainConfig(steps=1500),
+            n_pos=300, n_neg=220, rng=rng, mine_scenes=4)
+    casc = multi.cascade(coarse_svm=coarse_svm, rng=rng)
+    cdets = casc.detect(sparse)
+    frac = casc.stats["region_area_frac"] / casc.stats["frames"]
+    print(f"      cascade: {len(cdets)} detections, fine stage ran on "
+          f"{frac*100:.0f}% of the frame's pixels")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
 # The unified detection API: one config tree, one typed result, one
 # session facade over the image / batch / video / service paths.
 # (DESIGN.md §8; the paper's one-command co-processor interface, §VI.)
+# Multi-class heads + two-stage cascade ride the same facade
+# (DESIGN.md §13): HeadRegistry-backed sessions score K heads in one
+# widened matmul; session.cascade() builds the coarse-reject scheduler.
 from repro.api.config import (PipelineConfig, ServiceConfig, presets,
                               register_preset)
 from repro.api.results import Detections
 from repro.api.session import DetectionSession
+from repro.core.cascade import CascadeConfig, CascadeDetector
+from repro.core.heads import HeadRegistry, SVMHead

@@ -40,6 +40,13 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
                           Accuracy within 1.5 points of fp32 on the
                           paper's Table I split (bench_accuracy.py);
                           byte-identical under data/tile sharding
+    presets("cascade")    two-stage scheduling: the half-resolution
+                          coarse head rejects empty neighbourhoods at a
+                          loose threshold and the full dense chain runs
+                          only on surviving snapped crops, with
+                          tracker-predicted boxes promoted past the
+                          coarse gate on video (core/cascade.py,
+                          DESIGN.md §13)
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -51,6 +58,7 @@ import dataclasses
 import json
 from typing import Any, Dict, Optional, Tuple
 
+from repro.core.cascade import CascadeConfig
 from repro.core.detector import DetectorConfig
 from repro.core.hog import HOGConfig, PAPER_HOG
 from repro.core.svm import SVMTrainConfig
@@ -83,6 +91,7 @@ class PipelineConfig:
     tracker: TrackerConfig = TrackerConfig()
     train: SVMTrainConfig = SVMTrainConfig()
     service: ServiceConfig = ServiceConfig()
+    cascade: CascadeConfig = CascadeConfig()
 
     def __post_init__(self):
         if self.detector.hog != self.hog:
@@ -208,6 +217,16 @@ def _register_builtin() -> None:
         detector=DetectorConfig(hog=hog_svm.QUANT, score_threshold=0.5,
                                 backend="fused", batch_chunk=0),
         train=hog_svm.TRAIN))
+    # cascade: two-stage scheduling -- the 66x34 half-resolution coarse
+    # head sweeps the frame at a loose threshold and only its hit
+    # neighbourhoods run the full dense chain (core/cascade.py,
+    # DESIGN.md §13). session.cascade() builds the scheduler; BENCH
+    # "cascade" records the retention/speedup gate.
+    register_preset("cascade", PipelineConfig(
+        name="cascade", hog=hog_svm.CONFIG,
+        detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5),
+        train=hog_svm.TRAIN,
+        cascade=CascadeConfig(enabled=True)))
 
 
 _register_builtin()

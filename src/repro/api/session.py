@@ -27,6 +27,7 @@ and services skip retraining.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -39,6 +40,7 @@ from repro.core.detector import (FrameDetector, _batch_fn, _frame_program,
                                  _sharded_batch_fn, _single_fn,
                                  _tile_local_fn, _tiled_batch_fn,
                                  _tiled_single_fn)
+from repro.core.heads import HeadRegistry
 from repro.core.hog import hog_descriptor
 from repro.core.svm import SVMParams, train_svm
 from repro.core.video import Tracker
@@ -61,11 +63,30 @@ class DetectionSession:
     config.train schedule) or `load` (checkpoint directory).
     """
 
-    def __init__(self, svm: SVMParams, config: ConfigLike = None):
+    def __init__(self, svm: Union[SVMParams, HeadRegistry],
+                 config: ConfigLike = None):
         self.config = _as_config(config)
-        self.svm = svm
-        self.detector = FrameDetector(svm, self.config.detector)
+        if isinstance(svm, HeadRegistry):
+            # multi-head session: stack every public head into one
+            # widened parameter block (core/heads.py); per-head
+            # threshold overrides land in class_thresholds, and the
+            # head names ride into every Detections as class labels
+            self.registry: Optional[HeadRegistry] = svm
+            stacked, names, thresholds = svm.stacked()
+            det_cfg = self.config.detector
+            resolved = tuple(det_cfg.score_threshold if t is None else t
+                             for t in thresholds)
+            det_cfg = dataclasses.replace(det_cfg,
+                                          class_thresholds=resolved)
+            self.svm = stacked
+            self.detector = FrameDetector(stacked, det_cfg, classes=names)
+        else:
+            self.registry = None
+            self.svm = svm
+            self.detector = FrameDetector(svm, self.config.detector)
+        self._class_detectors: Dict[Tuple[str, ...], FrameDetector] = {}
         self.train_losses = None       # set by train()
+        self.mined_negatives = 0       # hard negatives added by train()
         self._warm: set = set()
         self._stats = {"frames": 0, "batches": 0, "clips": 0}
 
@@ -73,11 +94,21 @@ class DetectionSession:
     @classmethod
     def train(cls, config: ConfigLike = None, n_pos: int = 1500,
               n_neg: int = 1000, seed: int = 0, data_cfg=None,
-              rng: Optional[np.random.Generator] = None
+              rng: Optional[np.random.Generator] = None,
+              hard_negative_rounds: int = 0, mine_scenes: int = 16
               ) -> "DetectionSession":
         """Train the SVM on synthetic pedestrian windows using the
         tree's `hog` geometry and `train` schedule. Pass `rng` to
-        share a caller's stream (it advances by the window draws)."""
+        share a caller's stream (it advances by the window draws).
+
+        `hard_negative_rounds` > 0 adds that many bootstrapping rounds
+        (data/mining.py): each sweeps the current head over
+        `mine_scenes` person-free scenes at a loose threshold and
+        retrains with the firing windows as extra negatives -- the fix
+        for the dense-scan domain gap (downscaled pyramid levels are
+        smoother than any window-sized training negative), and what the
+        cascade's retention contract is calibrated against."""
+        from repro.data.mining import mine_hard_negatives
         from repro.data.synth_pedestrian import (PedestrianDataConfig,
                                                  make_windows)
         config = _as_config(config)
@@ -85,19 +116,40 @@ class DetectionSession:
             rng = np.random.default_rng(seed)
         x, y = make_windows(n_pos, n_neg,
                             data_cfg or PedestrianDataConfig(), rng)
-        feats = hog_descriptor(jnp.asarray(x), config.hog)
-        svm, losses = train_svm(feats, jnp.asarray(y), config.train)
+        feats = np.asarray(hog_descriptor(jnp.asarray(x), config.hog))
+        labels = np.asarray(y)
+        svm, losses = train_svm(jnp.asarray(feats), jnp.asarray(labels),
+                                config.train)
+        mined = 0
+        for _ in range(int(hard_negative_rounds)):
+            neg = mine_hard_negatives(svm, config.detector, mine_scenes,
+                                      rng)
+            if not len(neg):
+                break
+            mined += len(neg)
+            feats = np.concatenate(
+                [feats, np.asarray(hog_descriptor(jnp.asarray(neg),
+                                                  config.hog))])
+            labels = np.concatenate(
+                [labels, np.zeros(len(neg), labels.dtype)])
+            svm, losses = train_svm(jnp.asarray(feats),
+                                    jnp.asarray(labels), config.train)
         session = cls(svm, config)
         session.train_losses = losses
+        session.mined_negatives = mined
         return session
 
     @classmethod
     def load(cls, path: str, config: ConfigLike = None,
              step: Optional[int] = None) -> "DetectionSession":
         """Restore SVM params saved by `save` (checkpoint/manager.py
-        layout); `step=None` takes the latest committed step."""
+        layout); `step=None` takes the latest committed step. A
+        directory carrying a `heads.json` manifest restores as a
+        multi-head session (HeadRegistry round-trip)."""
         from repro.checkpoint.manager import CheckpointManager
         config = _as_config(config)
+        if HeadRegistry.is_registry_checkpoint(path):
+            return cls(HeadRegistry.load(path, step), config)
         mgr = CheckpointManager(path)
         if step is None:
             step = mgr.latest_step()
@@ -109,24 +161,56 @@ class DetectionSession:
         return cls(mgr.restore(step, skeleton), config)
 
     def save(self, path: str, step: int = 0) -> None:
-        """Persist the SVM params (atomic-commit checkpoint layout)."""
+        """Persist the SVM params (atomic-commit checkpoint layout); a
+        registry-backed session writes the multi-head layout (parameter
+        pytree + heads.json) that `load` detects."""
         from repro.checkpoint.manager import CheckpointManager
+        if self.registry is not None:
+            self.registry.save(path, step)
+            return
         CheckpointManager(path).save(step, self.svm)
 
     # ------------------------------------------------------------ facade
-    def detect(self, image) -> Detections:
-        """One frame -> Detections (device-resident, lazy decode)."""
-        self._stats["frames"] += 1
-        return self.detector.detect_raw(image)
+    def _detector_for(self, classes) -> FrameDetector:
+        """The compiled-program handle scoring `classes`: the default
+        stacked detector for None, else a cached per-subset handle
+        (its own stacked block + thresholds; programs per bucket are
+        shared process-wide via the detector's lru caches)."""
+        if classes is None:
+            return self.detector
+        if self.registry is None:
+            raise ValueError(
+                "detect(classes=...) needs a HeadRegistry-backed "
+                "session; this one holds plain single-head params")
+        names = (classes,) if isinstance(classes, str) else tuple(classes)
+        det = self._class_detectors.get(names)
+        if det is None:
+            stacked, names, thresholds = self.registry.stacked(names)
+            det_cfg = self.config.detector
+            resolved = tuple(det_cfg.score_threshold if t is None else t
+                             for t in thresholds)
+            det_cfg = dataclasses.replace(det_cfg,
+                                          class_thresholds=resolved)
+            det = FrameDetector(stacked, det_cfg, classes=names)
+            self._class_detectors[names] = det
+        return det
 
-    def detect_batch(self, frames) -> Detections:
+    def detect(self, image, classes=None) -> Detections:
+        """One frame -> Detections (device-resident, lazy decode).
+        `classes` picks a head subset on a registry-backed session (a
+        name or sequence of names; None = every public head)."""
+        self._stats["frames"] += 1
+        return self._detector_for(classes).detect_raw(image)
+
+    def detect_batch(self, frames, classes=None) -> Detections:
         """Stacked (B, H, W[, 3]) array or frame list -> one batched
         Detections; same one-bucket-per-call contract as the detector.
         With `config.detector.data_parallel != 1` the batch runs
         sharded, B/n_devices frames per device (pad-and-mask for
-        non-divisible B; results byte-identical to single-device)."""
+        non-divisible B; results byte-identical to single-device).
+        `classes` picks a head subset on a registry-backed session."""
         self._stats["batches"] += 1
-        return self.detector.detect_batch_raw(frames)
+        return self._detector_for(classes).detect_batch_raw(frames)
 
     @property
     def data_devices(self) -> int:
@@ -153,6 +237,31 @@ class DetectionSession:
             out.extend(Detections.from_list(trk.update(d))
                        for d in per_frame)
         return out
+
+    def cascade(self, coarse_svm: Optional[SVMParams] = None,
+                rng: Optional[np.random.Generator] = None):
+        """Build the two-stage CascadeDetector (core/cascade.py) over
+        THIS session's fine detector: a half-resolution coarse head
+        sweeps each frame at `config.cascade.coarse_threshold` and only
+        its hit neighbourhoods run the dense chain. The coarse params
+        come from (in order) the `coarse_svm` argument, the registry's
+        auxiliary "_coarse" head, or a fresh synthetic training run
+        (cached back into the registry when one is present)."""
+        from repro.core.cascade import (_COARSE_NAME, CascadeDetector,
+                                        coarse_detector, train_coarse_head)
+        ccfg = self.config.cascade
+        if coarse_svm is None:
+            if self.registry is not None and _COARSE_NAME in self.registry:
+                coarse_svm = self.registry.single(_COARSE_NAME)
+            else:
+                coarse_svm, _ = train_coarse_head(
+                    self.config.hog, self.config.train, rng=rng)
+                if self.registry is not None:
+                    self.registry.add(_COARSE_NAME, coarse_svm,
+                                      metadata={"role": "cascade-coarse"},
+                                      replace=True)
+        coarse = coarse_detector(coarse_svm, self.detector.cfg, ccfg)
+        return CascadeDetector(self.detector, coarse, ccfg)
 
     def serve(self, **overrides) -> "DetectionService":
         """Build a DetectionService on THIS session's detector and

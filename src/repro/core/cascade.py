@@ -1,0 +1,342 @@
+"""Two-stage cascade: cheap coarse reject, full HOG+SVM on survivors.
+
+The dense path scores every window of every pyramid scale; on sparse
+scenes (most of serving traffic) nearly all of that work scores empty
+background. The cascade runs a CHEAP first stage over the whole frame --
+a half-resolution coarse head (66x34 window = the pedestrian geometry at
+1/2 scale, 756 features vs 3780) swept over a reduced scale set -- and
+promotes only the neighbourhoods of its loose-threshold hits to the full
+pipeline, which then runs dense on a handful of snapped crops instead of
+the whole frame. The speed trick of "HOG based Fast Human Detection"
+(PAPERS.md, arXiv 1501.02058), re-cut for this codebase: both stages are
+the SAME compiled dense program family (core/detector.py), just with
+different HOG geometry, so the cascade is purely a scheduler.
+
+Stage layout per frame:
+
+    coarse FrameDetector (66x34 head, coarse_scales, LOOSE threshold)
+        -> candidate boxes                      [cheap: ~25% of the
+    + tracker-predicted ROI boxes (video)         fine-stage pixels]
+        -> plan_regions(): dilate, merge overlapping neighbourhoods,
+           cap at max_regions, snap OUTWARD to the snap grid
+        -> fine FrameDetector on each cropped region (full window,
+           full scales), boxes offset back to frame coordinates
+        -> one host NMS per class across regions (crops can overlap)
+
+Monotonicity contract (pinned by tests/test_cascade.py): loosening the
+coarse threshold only ADDS candidate boxes, and `plan_regions` guarantees
+every candidate's dilated box is covered by some region -- bounding
+rects only grow under merging and edges only snap outward -- so a looser
+reject threshold never loses a survivor.
+
+Tracker ROI promotion: predicted track boxes from `core/video.py` enter
+the planner alongside the coarse hits, so a track whose pedestrian the
+coarse stage misses on a hard frame (blur, partial occlusion) still gets
+its neighbourhood scored by the fine stage. That is the video contract:
+detection quality degrades toward the coarse stage only for NEW objects,
+never for tracked ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.detector import DetectorConfig, FrameDetector, _nms
+from repro.core.hog import HOGConfig
+from repro.core.svm import SVMParams
+
+# coarse head geometry: the paper's 130x66 pedestrian window at half
+# resolution (active 64x32 -> 7x3 blocks -> 756 features, ~20% of the
+# fine head's 3780); scales chosen so the coarse sweep covers the same
+# person heights as the fine sweep's (1.0, 0.8, 0.64) at ~25% of the
+# fine stage's summed pixel area
+COARSE_WINDOW = (66, 34)
+_COARSE_NAME = "_coarse"                    # registry name (auxiliary)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Knobs of the two-stage scheduler (core/cascade.py)."""
+
+    enabled: bool = False          # session/bench opt-in
+    coarse_scales: Tuple[float, ...] = (0.5, 0.4, 0.32)
+    #   sweep scales of the 66x34 coarse head; 0.5 matches fine scale
+    #   1.0 (both see a 132px person), 0.32 matches 0.64
+    coarse_threshold: float = 0.0  # LOOSE coarse score gate -- must sit
+    #   well below the fine threshold so borderline pedestrians survive
+    #   to the fine stage (which applies the real threshold)
+    coarse_max_detections: int = 64
+    margin: int = 24               # px each candidate box dilates by
+    #   before region planning: fine-stage context + tracker jitter
+    snap: int = 36                 # region edges snap OUTWARD to this
+    #   grid, so region shapes quantize into few compiled buckets
+    #   (shape_bucket-friendly) instead of one program per frame. The
+    #   default is a multiple of the HOG cell stride (6 px): a region
+    #   origin that lies on the cell grid keeps the crop's scale-1.0
+    #   window grid aligned with the full-frame grid, so interior
+    #   scale-1.0 detections reproduce exactly in the crop instead of
+    #   wobbling by the origin offset mod cell
+    max_regions: int = 4           # overlapping neighbourhoods merge
+    #   until at most this many crops run the fine stage
+    min_frame_area: int = 0        # frames below this skip the cascade
+    #   and run the fine stage dense (tiny frames: coarse overhead wins)
+    fine_hysteresis: float = 0.0   # the fine stage runs region CROPS at
+    #   (score_threshold - this): a crop's HOG grid is offset relative
+    #   to the full frame (region origins snap to `snap`, not the cell
+    #   stride, and each pyramid level of a crop resamples differently),
+    #   so per-window scores jitter by up to ~1-2 around the full-pass
+    #   value; a hysteresis band keeps borderline full-pass detections
+    #   from dropping out of the crop pass. 0 = crops run at the exact
+    #   fine threshold (byte-compatible with the fine detector's cfg)
+
+
+# --------------------------------------------------------------- planner
+
+def _snap_regions(rects: Sequence[Tuple[float, float, float, float]],
+                  frame_hw: Tuple[int, int], snap: int
+                  ) -> List[Tuple[int, int, int, int]]:
+    h, w = frame_hw
+    out = []
+    for y0, x0, y1, x1 in rects:
+        y0 = max(0, int(np.floor(y0 / snap)) * snap)
+        x0 = max(0, int(np.floor(x0 / snap)) * snap)
+        y1 = min(h, int(np.ceil(y1 / snap)) * snap)
+        x1 = min(w, int(np.ceil(x1 / snap)) * snap)
+        if y1 > y0 and x1 > x0:
+            out.append((y0, x0, y1, x1))
+    return out
+
+
+def plan_regions(boxes, frame_hw: Tuple[int, int],
+                 cfg: Optional[CascadeConfig] = None
+                 ) -> List[Tuple[int, int, int, int]]:
+    """Candidate boxes -> at most `max_regions` fine-stage crops.
+
+    `boxes` is (N, 4) of (y0, x0, y1, x1) in frame coordinates (coarse
+    hits + promoted track predictions). Every box is dilated by
+    `margin`, overlapping dilated boxes merge into one neighbourhood
+    (connected components of the overlap graph), components merge
+    further -- closest pair first -- until at most `max_regions` remain,
+    and each component's bounding rect snaps OUTWARD to the `snap` grid.
+
+    Coverage invariant (the basis of threshold monotonicity): every
+    input box's dilated rect lies inside the returned union -- a box is
+    inside its component's bounding rect by construction, merging only
+    unions rects, and snapping only moves edges outward.
+    """
+    cfg = cfg or CascadeConfig()
+    h, w = int(frame_hw[0]), int(frame_hw[1])
+    boxes = np.asarray(boxes, np.float32).reshape(-1, 4)
+    if len(boxes) == 0:
+        return []
+    m = float(cfg.margin)
+    rects = np.stack([
+        np.clip(boxes[:, 0] - m, 0, h), np.clip(boxes[:, 1] - m, 0, w),
+        np.clip(boxes[:, 2] + m, 0, h), np.clip(boxes[:, 3] + m, 0, w),
+    ], axis=1)
+    # connected components of the pairwise-overlap graph (union-find)
+    n = len(rects)
+    parent = list(range(n))
+
+    def find(i):
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    overlap = ((rects[:, None, 0] < rects[None, :, 2])
+               & (rects[None, :, 0] < rects[:, None, 2])
+               & (rects[:, None, 1] < rects[None, :, 3])
+               & (rects[None, :, 1] < rects[:, None, 3]))
+    for i in range(n):
+        for j in range(i + 1, n):
+            if overlap[i, j]:
+                parent[find(i)] = find(j)
+    comps: Dict[int, List[int]] = {}
+    for i in range(n):
+        comps.setdefault(find(i), []).append(i)
+    bounds = [(float(rects[ix, 0].min()), float(rects[ix, 1].min()),
+               float(rects[ix, 2].max()), float(rects[ix, 3].max()))
+              for ix in (np.asarray(c) for c in comps.values())]
+    # cap at max_regions: repeatedly merge the closest pair (rect gap)
+    while len(bounds) > max(1, cfg.max_regions):
+        best, bi, bj = None, 0, 1
+        for i in range(len(bounds)):
+            for j in range(i + 1, len(bounds)):
+                a, b = bounds[i], bounds[j]
+                dy = max(0.0, max(a[0], b[0]) - min(a[2], b[2]))
+                dx = max(0.0, max(a[1], b[1]) - min(a[3], b[3]))
+                gap = dy * dy + dx * dx
+                if best is None or gap < best:
+                    best, bi, bj = gap, i, j
+        a, b = bounds[bi], bounds[bj]
+        merged = (min(a[0], b[0]), min(a[1], b[1]),
+                  max(a[2], b[2]), max(a[3], b[3]))
+        bounds = [r for k, r in enumerate(bounds) if k not in (bi, bj)]
+        bounds.append(merged)
+    return sorted(_snap_regions(bounds, (h, w), max(1, cfg.snap)))
+
+
+# ------------------------------------------------------------ coarse head
+
+def coarse_hog(fine: HOGConfig) -> HOGConfig:
+    """The coarse stage's HOG geometry: the fine config's numerics on
+    the half-resolution window."""
+    return dataclasses.replace(fine, window_h=COARSE_WINDOW[0],
+                               window_w=COARSE_WINDOW[1])
+
+
+def train_coarse_head(fine_hog: HOGConfig, train_cfg=None,
+                      n_pos: int = 1500, n_neg: int = 1000,
+                      rng: Optional[np.random.Generator] = None,
+                      hard_negative_rounds: int = 1,
+                      mine_scenes: int = 12
+                      ) -> Tuple[SVMParams, HOGConfig]:
+    """Train the cascade's coarse SVM: synthetic pedestrian windows
+    downsampled to the 66x34 coarse geometry, same numerics as the fine
+    chain, then `hard_negative_rounds` of scene-level bootstrapping
+    (data/mining.py) so the LOOSE reject gate stays quiet on empty
+    frames -- without it the coarse sweep fires all over downscaled
+    background and every frame promotes to a full-frame region.
+    Returns (params, coarse HOGConfig)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hog import hog_descriptor
+    from repro.core.svm import SVMTrainConfig, train_svm
+    from repro.data.mining import mine_hard_negatives
+    from repro.data.synth_pedestrian import PedestrianDataConfig, \
+        make_windows
+    rng = np.random.default_rng(0) if rng is None else rng
+    x, y = make_windows(n_pos, n_neg, PedestrianDataConfig(), rng)
+    ch = coarse_hog(fine_hog)
+    small = jax.image.resize(
+        jnp.asarray(x, jnp.float32),
+        (x.shape[0], ch.window_h, ch.window_w, x.shape[-1]), "linear")
+    feats = np.asarray(hog_descriptor(small, ch))
+    labels = np.asarray(y)
+    tc = train_cfg or SVMTrainConfig()
+    svm, _ = train_svm(jnp.asarray(feats), jnp.asarray(labels), tc)
+    sweep = DetectorConfig(hog=ch, scales=CascadeConfig().coarse_scales)
+    for _ in range(int(hard_negative_rounds)):
+        neg = mine_hard_negatives(svm, sweep, mine_scenes, rng)
+        if not len(neg):
+            break
+        feats = np.concatenate(
+            [feats, np.asarray(hog_descriptor(jnp.asarray(neg, jnp.float32),
+                                              ch))])
+        labels = np.concatenate([labels, np.zeros(len(neg), labels.dtype)])
+        svm, _ = train_svm(jnp.asarray(feats), jnp.asarray(labels), tc)
+    return svm, ch
+
+
+def coarse_detector(coarse_svm: SVMParams, fine_cfg: DetectorConfig,
+                    cascade: CascadeConfig) -> FrameDetector:
+    """Build the stage-1 detector: coarse head geometry, the cascade's
+    reduced scale sweep and LOOSE threshold, same backend/numerics
+    family as the fine stage."""
+    ccfg = dataclasses.replace(
+        fine_cfg, hog=coarse_hog(fine_cfg.hog),
+        scales=cascade.coarse_scales,
+        score_threshold=cascade.coarse_threshold,
+        max_detections=cascade.coarse_max_detections,
+        class_thresholds=(), frame_parallel=1)
+    return FrameDetector(coarse_svm, ccfg)
+
+
+# --------------------------------------------------------------- cascade
+
+class CascadeDetector:
+    """Two-stage scheduler over a coarse and a fine FrameDetector.
+
+    `detect(frame, roi_boxes=...)` returns the legacy list-of-dicts
+    contract of the fine detector (multi-class dicts keep class_id /
+    label), plus cumulative `stats`: frames, frames_empty (coarse
+    rejected everything), frames_dense (below min_frame_area -> full
+    pass), regions, region_area_frac (fine-stage pixel fraction vs
+    dense).
+    """
+
+    def __init__(self, fine: FrameDetector, coarse: FrameDetector,
+                 cfg: Optional[CascadeConfig] = None):
+        self.fine = fine
+        self.coarse = coarse
+        self.cfg = cfg or CascadeConfig()
+        hyst = float(self.cfg.fine_hysteresis)
+        if hyst > 0:
+            fc = fine.cfg
+            self._crop_fine = FrameDetector(fine.svm, dataclasses.replace(
+                fc, score_threshold=fc.score_threshold - hyst,
+                class_thresholds=tuple(t - hyst
+                                       for t in fc.class_thresholds)),
+                classes=fine.classes)
+        else:
+            self._crop_fine = fine
+        self.stats: Dict[str, float] = {
+            "frames": 0, "frames_empty": 0, "frames_dense": 0,
+            "regions": 0, "region_area_frac": 0.0}
+
+    def _merge(self, dets: List[dict]) -> List[dict]:
+        """One NMS pass per class across region-local results (regions
+        may overlap after snapping)."""
+        out: List[dict] = []
+        by_class: Dict[object, List[dict]] = {}
+        for d in dets:
+            by_class.setdefault(d.get("class_id"), []).append(d)
+        for ds in by_class.values():
+            ds.sort(key=lambda d: -d["score"])
+            boxes = np.asarray([d["box"] for d in ds],
+                               np.float32).reshape(-1, 4)
+            scores = np.asarray([d["score"] for d in ds], np.float32)
+            out.extend(ds[i] for i in
+                       _nms(boxes, scores, self.fine.cfg.nms_iou))
+        out.sort(key=lambda d: -d["score"])
+        return out
+
+    def detect(self, frame, roi_boxes: Sequence = ()) -> List[dict]:
+        """One frame -> detection dicts. `roi_boxes` are promoted
+        regions (tracker-predicted boxes) that bypass the coarse gate."""
+        frame = np.asarray(frame)
+        h, w = int(frame.shape[0]), int(frame.shape[1])
+        self.stats["frames"] += 1
+        if h * w < self.cfg.min_frame_area:
+            self.stats["frames_dense"] += 1
+            self.stats["region_area_frac"] += 1.0
+            return self.fine.detect_raw(frame).to_list()
+        cand = [d["box"] for d in self.coarse.detect_raw(frame).to_list()]
+        cand += [tuple(float(v) for v in b) for b in roi_boxes]
+        if not cand:
+            self.stats["frames_empty"] += 1
+            return []
+        regions = plan_regions(np.asarray(cand, np.float32), (h, w),
+                               self.cfg)
+        self.stats["regions"] += len(regions)
+        area = sum((y1 - y0) * (x1 - x0) for y0, x0, y1, x1 in regions)
+        self.stats["region_area_frac"] += min(1.0, area / float(h * w))
+        dets: List[dict] = []
+        for y0, x0, y1, x1 in regions:
+            # crops run through the hysteresis-banded detector (equal to
+            # self.fine when cfg.fine_hysteresis == 0)
+            for d in self._crop_fine.detect_raw(
+                    frame[y0:y1, x0:x1]).to_list():
+                by0, bx0, by1, bx1 = d["box"]
+                d = dict(d)
+                d["box"] = (by0 + y0, bx0 + x0, by1 + y0, bx1 + x0)
+                dets.append(d)
+        return self._merge(dets)
+
+    def stream(self, frames, tracker=None) -> List[List[dict]]:
+        """Video path: frame-at-a-time cascade with tracker-guided ROI
+        promotion -- every live track's PREDICTED box enters the region
+        planner before detection, so tracked objects bypass the coarse
+        reject entirely. Returns per-frame tracked dicts."""
+        from repro.core.video import Tracker
+        trk = Tracker() if tracker is None else tracker
+        out = []
+        for frame in frames:
+            rois = [t.predicted for t in trk.tracks]
+            dets = self.detect(frame, roi_boxes=rois)
+            out.append(trk.update(dets))
+        return out

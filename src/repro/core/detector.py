@@ -151,6 +151,12 @@ class DetectorConfig:
     #   differ only in float accumulation order (final-ulp score
     #   deltas); each mode is self-consistent, and tiled == untiled
     #   bitwise WITHIN either mode.
+    class_thresholds: Tuple[float, ...] = ()  # per-head score thresholds
+    #   for MULTI-HEAD scoring (svm["w"] of shape (K, F), see
+    #   score_blocks): entry k gates head k's windows. () = every head
+    #   uses score_threshold. Length must equal K when the program is
+    #   traced with stacked params; baked static (part of the program
+    #   cache key) exactly like score_threshold.
 
 
 def scene_blocks(gray: Array, cfg: HOGConfig,
@@ -178,11 +184,24 @@ def score_blocks(blocks: Array, w: Array, b: Array,
     accumulation. `use_kernel` routes the matmul through the Pallas
     kernel (kernels/svm_matmul.py:score_matmul) -- the MXU-explicit
     path used by the kernel/fused backends.
+
+    MULTI-HEAD: `w` of shape (K, F) with `b` of shape (K,) scores K
+    stacked SVM heads in the SAME matmul, widened to (36, 105*K) --
+    near-free on the MXU, since the reduction dim (36) and the M rows
+    are unchanged. Returns (K, PH, PW). Per-column arithmetic is
+    untouched by the widening: each output column is an independent
+    36-element dot product (int8 mode is exact integer accumulation;
+    float modes keep per-column accumulation order), so head k's plane
+    is byte-identical to scoring head k alone (tests/test_multihead.py
+    pins this per numerics mode).
     """
     bh, bw = cfg.blocks_hw                              # 15, 7
     BH, BW, bd = blocks.shape
     ph, pw = BH - bh + 1, BW - bw + 1
     flat = blocks.reshape(BH * BW, bd)
+    if w.ndim == 2:                                     # stacked (K, F) heads
+        return _score_blocks_multi(flat, w, b, cfg, use_kernel,
+                                   BH, BW, ph, pw)
     if N.spec_for(cfg).quantized:
         # fixed mode: the incoming grid is dequantized int8 (exactly
         # q * scale, numerics.finish_blocks), so requantizing recovers
@@ -218,6 +237,51 @@ def score_blocks(blocks: Array, w: Array, b: Array,
         for dj in range(bw):
             out = out + contrib[di:di + ph, dj:dj + pw, di * bw + dj]
     return out + b
+
+
+def _score_blocks_multi(flat: Array, w: Array, b: Array, cfg: HOGConfig,
+                        use_kernel: bool, BH: int, BW: int,
+                        ph: int, pw: int) -> Array:
+    """K stacked heads through one widened matmul: (BH*BW, 36) @
+    (36, 105*K) -> (K, PH, PW). Weight columns are laid out head-major
+    ((k, offset) = k*105 + offset), so column k*105+o carries exactly
+    the column head k's single-head matmul would have at offset o --
+    the per-column int8 quantization scales, and with them the int8
+    codes, match the per-head path code for code. The shifted-add
+    collate runs the same static 15x7 unroll per head plane, in the
+    same accumulation order as the single-head path."""
+    bh, bw = cfg.blocks_hw
+    bd = flat.shape[-1]
+    K = w.shape[0]
+    if N.spec_for(cfg).quantized:
+        q, s_rows = quant.quantize_blocks(flat)
+        # (K, bh*bw, bd) -> (bd, K*bh*bw), head-major columns
+        wt = w.reshape(K * bh * bw, bd).T.astype(jnp.float32)
+        wq, s_cols = quant.quantize_weight_columns(wt)
+        if use_kernel:
+            from repro.kernels.svm_matmul import score_matmul_int8
+            ci = score_matmul_int8(q, wq)
+        else:
+            ci = jax.lax.dot_general(
+                q, wq, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        contrib = quant.rescale_scores(ci, s_rows, s_cols)
+    else:
+        wt = w.reshape(K * bh * bw, bd).T.astype(flat.dtype)
+        if use_kernel:
+            from repro.kernels.svm_matmul import score_matmul
+            contrib = score_matmul(flat, wt)
+        else:
+            contrib = jax.lax.dot_general(
+                flat, wt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    contrib = contrib.reshape(BH, BW, K, bh * bw)
+    out = jnp.zeros((K, ph, pw), jnp.float32)
+    for di in range(bh):                                # static 15x7 unroll
+        for dj in range(bw):
+            out = out + jnp.moveaxis(
+                contrib[di:di + ph, dj:dj + pw, :, di * bw + dj], 2, 0)
+    return out + b[:, None, None]
 
 
 @partial(jax.jit, static_argnames=("cfg", "backend"))
@@ -427,6 +491,7 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
 
     def fn(gray: Array, w: Array, b: Array, hw: Array):
         from repro.core.tiling import resize_banded
+        multi = w.ndim == 2            # stacked (K, F) heads, static
         parts = []
         for sh, sw, _ in specs:
             if (sh, sw) == (ph, pw):
@@ -436,12 +501,28 @@ def _frame_program(ph: int, pw: int, cfg: DetectorConfig) -> FrameProgram:
             else:
                 wy, wx = resize_w[(sh, sw)]
                 g = (wy @ gray) @ wx.T
-            parts.append(score_map(g, w, b, hcfg, cfg.backend).reshape(-1))
-        scores = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            sm = score_map(g, w, b, hcfg, cfg.backend)
+            parts.append(sm.reshape(sm.shape[0], -1) if multi
+                         else sm.reshape(-1))
+        scores = parts[0] if len(parts) == 1 \
+            else jnp.concatenate(parts, axis=-1)
         # windows must lie inside the TRUE (unpadded) frame and clear
         # the score threshold; both masks applied device-side
         inside = (boxes_dev[:, 2] <= hw[0] + 1e-4) \
             & (boxes_dev[:, 3] <= hw[1] + 1e-4)
+        if multi:
+            kh = int(w.shape[0])
+            if cfg.class_thresholds and len(cfg.class_thresholds) != kh:
+                raise ValueError(
+                    f"class_thresholds has {len(cfg.class_thresholds)} "
+                    f"entries but the stacked params carry {kh} heads")
+            thr = jnp.asarray(cfg.class_thresholds
+                              or (cfg.score_threshold,) * kh, jnp.float32)
+            valid = inside[None, :] & (scores > thr[:, None])
+            top, idx = jax.lax.top_k(jnp.where(valid, scores, -jnp.inf), k)
+            keep = jax.vmap(nms_keep, in_axes=(0, 0, None))(
+                boxes_dev[idx], top, cfg.nms_iou)
+            return top, idx, keep, jnp.sum(valid, axis=-1)
         valid = inside & (scores > cfg.score_threshold)
         top, idx = jax.lax.top_k(jnp.where(valid, scores, -jnp.inf), k)
         keep = nms_keep(boxes_dev[idx], top, cfg.nms_iou)
@@ -957,12 +1038,16 @@ _AUTOTUNE_PROBE_ITERS = 3
 
 def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
                     cfg: DetectorConfig, frame_shape: Tuple[int, ...],
-                    frame_dtype, dp: int = 1, fp: int = 1) -> int:
+                    frame_dtype, dp: int = 1, fp: int = 1,
+                    heads: int = 0) -> int:
     import time
 
     from repro.core import autotune_cache
     layout = f"{'rgb' if len(frame_shape) == 4 else 'gray'}-{frame_dtype}"
-    key = (h, w, ph, pw, batch, cfg, layout, dp, fp)
+    # `heads` rides at the END of the key so the k[7]/k[8] mesh indices
+    # in _autotune_key_str stay valid for pre-existing entries; 0 = the
+    # single-head (F,) parameter layout, K>0 = stacked (K, F) heads
+    key = (h, w, ph, pw, batch, cfg, layout, dp, fp, heads)
     hit = _AUTOTUNE.get(key)
     if hit is not None:
         autotune_cache.note_memory_hit()
@@ -990,8 +1075,12 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
     donate = _donate()
     mk = (lambda: jnp.array(frames, copy=True)) if donate \
         else (lambda: frames)
-    wv = jnp.zeros(cfg.hog.n_features, jnp.float32)
-    bv = jnp.float32(0.0)
+    if heads:
+        wv = jnp.zeros((heads, cfg.hog.n_features), jnp.float32)
+        bv = jnp.zeros((heads,), jnp.float32)
+    else:
+        wv = jnp.zeros(cfg.hog.n_features, jnp.float32)
+        bv = jnp.float32(0.0)
     hw_b = jnp.tile(jnp.asarray([h, w], jnp.float32), (batch, 1))
     probe_ms = {}
     for c in candidates:
@@ -1018,7 +1107,8 @@ def _autotune_chunk(h: int, w: int, ph: int, pw: int, batch: int,
 
 def _autotune_key_str(k: tuple) -> str:
     mesh = f"data:{k[7]}" + (f",tile:{k[8]}" if k[8] > 1 else "")
-    return f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} mesh={mesh} [{k[6]}]"
+    heads = f" heads:{k[9]}" if len(k) > 9 and k[9] else ""
+    return f"{k[0]}x{k[1]}->{k[2]}x{k[3]} B={k[4]} mesh={mesh}{heads} [{k[6]}]"
 
 
 def autotune_report() -> dict:
@@ -1041,10 +1131,23 @@ class FrameDetector:
     retrace; only the final box decode touches host numpy.
     """
 
-    def __init__(self, svm: SVMParams, cfg: Optional[DetectorConfig] = None):
+    def __init__(self, svm: SVMParams, cfg: Optional[DetectorConfig] = None,
+                 classes: Optional[Tuple[str, ...]] = None):
         # default built per instance (never a shared default-arg object)
         self.svm = svm
         self.cfg = DetectorConfig() if cfg is None else cfg
+        # stacked (K, F) params score K heads in one widened matmul; the
+        # optional class names ride into every Detections this handle
+        # builds so decoded boxes carry class_id/label
+        self.heads = int(np.shape(svm["w"])[0]) \
+            if np.ndim(svm["w"]) == 2 else 0
+        if classes is not None and self.heads \
+                and len(classes) != self.heads:
+            raise ValueError(
+                f"{len(classes)} class names for {self.heads} heads")
+        self.classes = tuple(classes) if classes is not None else (
+            tuple(f"head{i}" for i in range(self.heads))
+            if self.heads else None)
 
     def program_for(self, h: int, w: int) -> Tuple[FrameProgram, int, int]:
         b = max(1, self.cfg.shape_bucket)
@@ -1074,6 +1177,11 @@ class FrameDetector:
         keeps routing deterministic per program."""
         fp = _resolve_fp(self.cfg, dp)
         if fp > 1 and ph * pw >= self.cfg.frame_parallel_min_area:
+            if self.heads:
+                raise ValueError(
+                    "multi-head (stacked) params do not compose with "
+                    "frame_parallel tiling yet; run the stacked heads "
+                    "with frame_parallel=1 (the data axis still shards)")
             return fp
         return 1
 
@@ -1118,7 +1226,7 @@ class FrameDetector:
         h, w = int(frame.shape[0]), int(frame.shape[1])
         prog, ph, pw = self.program_for(h, w)
         if prog.fn is None:
-            return Detections.empty(prog.tables)
+            return Detections.empty(prog.tables, self.classes)
         if _donate() and isinstance(image, jax.Array):
             # the program donates its frame argument; a caller-owned
             # device buffer must not be invalidated under them
@@ -1128,7 +1236,8 @@ class FrameDetector:
               else _single_fn(h, w, ph, pw, self.cfg))
         top, idx, keep, n_valid = fn(frame, self.svm["w"], self.svm["b"],
                                      jnp.asarray([h, w], jnp.float32))
-        return Detections(top, idx, keep, n_valid, prog.tables)
+        return Detections(top, idx, keep, n_valid, prog.tables,
+                          classes=self.classes)
 
     def __call__(self, image: Array) -> List[dict]:
         """Legacy per-frame contract (list of dicts). Thin shim over
@@ -1155,7 +1264,8 @@ class FrameDetector:
         if isinstance(frames, (list, tuple)) and not frames:
             return Detections.empty_batch(
                 DecodeTables(np.zeros((0, 4), np.float32),
-                             np.zeros((0,), np.float32), 0), 0)
+                             np.zeros((0,), np.float32), 0), 0,
+                self.classes)
         uniform = not isinstance(frames, (list, tuple)) or \
             len({np.shape(f) for f in frames}) == 1
         if uniform:
@@ -1178,7 +1288,8 @@ class FrameDetector:
             if n == 0:
                 return Detections.empty_batch(
                     DecodeTables(np.zeros((0, 4), np.float32),
-                                 np.zeros((0,), np.float32), 0), 0)
+                                 np.zeros((0,), np.float32), 0), 0,
+                    self.classes)
             hws = [(h, w)] * n
         else:
             # mixed true sizes: grayscale + pad per frame on host, then
@@ -1193,7 +1304,8 @@ class FrameDetector:
                 f"{sorted(buckets)}; group frames by bucket first")
         prog, ph, pw = self.program_for(*hws[0])
         if prog.fn is None:
-            return Detections.empty_batch(prog.tables, n)
+            return Detections.empty_batch(prog.tables, n,
+                                          self.classes)
         th, tw = (h, w) if uniform else (ph, pw)
         if uniform:
             frames_b = jnp.asarray(batch)
@@ -1215,7 +1327,7 @@ class FrameDetector:
         if cfg.batch_chunk == 0:         # autotune scan-vs-vmap (first use)
             chunk = _autotune_chunk(th, tw, ph, pw, n_pad, cfg,
                                     tuple(frames_b.shape), frames_b.dtype,
-                                    dp, fp)
+                                    dp, fp, self.heads)
             cfg = dataclasses.replace(cfg, batch_chunk=chunk)
         if fp > 1:
             fn = _tiled_batch_fn(th, tw, ph, pw, n_pad, dp, fp, cfg,
@@ -1236,7 +1348,8 @@ class FrameDetector:
         if n_pad != n:                   # drop the masked pad rows
             top, idx, keep, n_valid = (top[:n], idx[:n], keep[:n],
                                        n_valid[:n])
-        return Detections(top, idx, keep, n_valid, prog.tables)
+        return Detections(top, idx, keep, n_valid, prog.tables,
+                          classes=self.classes)
 
     def detect_batch(self, frames) -> List[List[dict]]:
         """Legacy batched contract (B per-frame dict lists, one host

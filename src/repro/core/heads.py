@@ -1,0 +1,204 @@
+"""Named SVM heads -> one stacked parameter block (DESIGN.md §13).
+
+The scoring path evaluates a linear SVM as one (BH*BW, 36) @ (36, 105)
+MXU matmul; K classifiers widen that to (36, 105*K) -- near-free on the
+hardware. `HeadRegistry` is the host-side subsystem that owns the K: it
+keeps NAMED heads (pedestrian, vehicle, a user's custom head), each a
+plain `{"w": (F,), "b": ()}` parameter dict plus an optional per-head
+score threshold and free-form metadata, and stacks any subset into the
+`{"w": (K, F), "b": (K,)}` block the detector's multi-head program
+consumes (`core/detector.py:score_blocks`). Stacking order is the
+caller's class order: head k of the stacked block IS class_id k of the
+resulting Detections.
+
+Names starting with an underscore (e.g. the cascade's "_coarse" head,
+`core/cascade.py`) are auxiliary: they save/load with the registry but
+are excluded from default stacking, so `detect()` without an explicit
+class list never scores them.
+
+Persistence rides the existing checkpoint layout
+(`checkpoint/manager.py`): parameters land as one pytree
+`{name: {"w", "b"}}` under atomic step directories, while `heads.json`
+next to them records order, thresholds and metadata -- the session
+(`api/session.py`) routes `save`/`load` here whenever that manifest is
+present, so single-head checkpoints stay readable by old code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.svm import SVMParams
+
+HEADS_MANIFEST = "heads.json"
+
+
+@dataclasses.dataclass
+class SVMHead:
+    """One named classifier: params + decode-time policy."""
+    name: str
+    params: SVMParams                       # {"w": (F,), "b": ()}
+    threshold: Optional[float] = None       # None -> detector default
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_features(self) -> int:
+        return int(np.shape(self.params["w"])[0])
+
+
+class HeadRegistry:
+    """Ordered, named SVM heads with stacking and checkpoint round-trip.
+
+    Insertion order is stacking order; `stacked()` turns any subset into
+    the detector's `{"w": (K, F), "b": (K,)}` parameter block.
+    """
+
+    def __init__(self, heads: Sequence[SVMHead] = ()):
+        self._heads: Dict[str, SVMHead] = {}
+        for h in heads:
+            self.add(h.name, h.params, h.threshold, h.metadata)
+
+    # ------------------------------------------------------- membership
+    def add(self, name: str, params: SVMParams,
+            threshold: Optional[float] = None,
+            metadata: Optional[Dict[str, Any]] = None,
+            replace: bool = False) -> SVMHead:
+        """Register a head. Params are snapshotted to host float32 (w
+        flattened to (F,)) so stacking is pure numpy; re-adding an
+        existing name needs `replace=True`."""
+        if not name:
+            raise ValueError("head name must be non-empty")
+        if name in self._heads and not replace:
+            raise ValueError(f"head {name!r} already registered "
+                             f"(pass replace=True to overwrite)")
+        w = np.asarray(params["w"], np.float32).reshape(-1)
+        b = np.float32(np.asarray(params["b"], np.float32).reshape(()))
+        head = SVMHead(name, {"w": w, "b": b},
+                       None if threshold is None else float(threshold),
+                       dict(metadata or {}))
+        self._heads[name] = head
+        return head
+
+    def remove(self, name: str) -> None:
+        del self._heads[name]
+
+    def get(self, name: str) -> SVMHead:
+        return self._heads[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._heads
+
+    def __len__(self) -> int:
+        return len(self._heads)
+
+    def __iter__(self) -> Iterator[SVMHead]:
+        return iter(self._heads.values())
+
+    def __repr__(self) -> str:
+        return f"HeadRegistry({list(self._heads)})"
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        """Default stacking order: every PUBLIC head (no '_' prefix),
+        in insertion order."""
+        return tuple(n for n in self._heads if not n.startswith("_"))
+
+    @property
+    def n_features(self) -> Optional[int]:
+        """Feature width of the default (public) stack. Auxiliary
+        '_'-prefixed heads may carry a different HOG geometry (the
+        cascade's half-resolution coarse head does) -- uniformity is
+        enforced per stacking subset, not registry-wide."""
+        for n, h in self._heads.items():
+            if not n.startswith("_"):
+                return h.n_features
+        for h in self._heads.values():
+            return h.n_features
+        return None
+
+    # ---------------------------------------------------------- stacking
+    def stacked(self, names: Optional[Sequence[str]] = None
+                ) -> Tuple[SVMParams, Tuple[str, ...],
+                           Tuple[Optional[float], ...]]:
+        """Stack a subset of heads (default: all public ones) into the
+        multi-head parameter block. Returns `({"w": (K, F), "b": (K,)},
+        names, thresholds)` -- row k of w is head names[k], so class_id
+        k of the detections is names[k]; thresholds keeps each head's
+        override (None = use the detector's score_threshold)."""
+        names = tuple(self.names if names is None else names)
+        if not names:
+            raise ValueError("no heads to stack (registry empty or all "
+                             "auxiliary); pass explicit names")
+        missing = [n for n in names if n not in self._heads]
+        if missing:
+            raise KeyError(f"unknown heads {missing}; registered: "
+                           f"{list(self._heads)}")
+        heads = [self._heads[n] for n in names]
+        widths = {h.n_features for h in heads}
+        if len(widths) > 1:
+            raise ValueError(
+                f"stacked heads must share one HOG geometry; got "
+                f"feature widths { {n: self._heads[n].n_features for n in names} }")
+        svm: SVMParams = {
+            "w": np.stack([h.params["w"] for h in heads]),
+            "b": np.asarray([h.params["b"] for h in heads], np.float32)}
+        return svm, names, tuple(h.threshold for h in heads)
+
+    def single(self, name: str) -> SVMParams:
+        """One head's plain single-head `{"w": (F,), "b": ()}` params."""
+        return dict(self._heads[name].params)
+
+    # -------------------------------------------------------- checkpoint
+    def save(self, path: str, step: int = 0) -> None:
+        """Persist all heads: one checkpoint step for the parameter
+        pytree + `heads.json` (order/thresholds/metadata) at the root."""
+        from repro.checkpoint.manager import CheckpointManager
+        if not self._heads:
+            raise ValueError("cannot save an empty HeadRegistry")
+        tree = {n: {"w": h.params["w"], "b": h.params["b"]}
+                for n, h in self._heads.items()}
+        CheckpointManager(path).save(step, tree)
+        manifest = {
+            "version": 1,
+            "heads": [{"name": h.name, "threshold": h.threshold,
+                       "n_features": h.n_features,
+                       "metadata": h.metadata} for h in self._heads.values()],
+        }
+        tmp = os.path.join(path, HEADS_MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(path, HEADS_MANIFEST))
+
+    @classmethod
+    def load(cls, path: str, step: Optional[int] = None) -> "HeadRegistry":
+        """Restore a registry saved by `save` (latest step by default)."""
+        import jax
+
+        from repro.checkpoint.manager import CheckpointManager
+        with open(os.path.join(path, HEADS_MANIFEST)) as f:
+            manifest = json.load(f)
+        mgr = CheckpointManager(path)
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {path}")
+        skeleton = {h["name"]: {
+            "w": jax.ShapeDtypeStruct((int(h["n_features"]),), np.float32),
+            "b": jax.ShapeDtypeStruct((), np.float32)}
+            for h in manifest["heads"]}
+        tree = mgr.restore(step, skeleton)
+        reg = cls()
+        for h in manifest["heads"]:
+            reg.add(h["name"], tree[h["name"]], h.get("threshold"),
+                    h.get("metadata"))
+        return reg
+
+    @staticmethod
+    def is_registry_checkpoint(path: str) -> bool:
+        return os.path.exists(os.path.join(path, HEADS_MANIFEST))

@@ -8,7 +8,11 @@ noise is smoothed out. This module is that layer, host-side on top of
 the device-resident detection programs (core/detector.py):
 
   * `Tracker` -- greedy IoU association between constant-velocity
-    track predictions and the current frame's detections. Matched
+    track predictions and the current frame's detections, gated on
+    `class_id` when detections carry one (multi-head results,
+    DESIGN.md §13): a pedestrian track can never be stolen by an
+    overlapping vehicle detection, and ids are allocated per class.
+    Matched
     tracks update their box, an EMA-smoothed score, and an EMA-smoothed
     velocity; unmatched detections open new tracks; unmatched tracks
     coast on their prediction for up to `max_misses` frames before
@@ -71,6 +75,8 @@ class Track:
     scale: float                 # pyramid scale of the last matched det
     hits: int = 1                # total matched frames
     misses: int = 0              # consecutive unmatched frames
+    class_id: Optional[int] = None   # detection head this track follows
+    label: Optional[str] = None      # head name (multi-class results)
 
     @property
     def predicted(self) -> np.ndarray:
@@ -95,9 +101,12 @@ class Tracker:
         """Associate one frame's detections; returns them with track ids.
 
         `detections` is the FrameDetector output (score-sorted dicts
-        with box/score/scale). Greedy matching takes the globally
-        highest-IoU (track, detection) pair first, so a detection can
-        never steal a track from a better-overlapping detection.
+        with box/score/scale, plus class_id/label on multi-head
+        results). Greedy matching takes the globally highest-IoU
+        (track, detection) pair first, so a detection can never steal a
+        track from a better-overlapping detection; pairs whose class
+        ids differ are masked out of the IoU matrix up front, so
+        association and id allocation are per class.
         """
         cfg = self.cfg
         dets = list(detections)
@@ -107,6 +116,13 @@ class Tracker:
             pred = np.stack([t.predicted for t in self.tracks])
             dbox = np.asarray([d["box"] for d in dets], np.float64)
             iou = iou_np(pred, dbox)
+            # class gate: a track only matches detections of ITS class
+            # (None matches None -- the single-head path is unchanged)
+            tcls = np.asarray([-1 if t.class_id is None else t.class_id
+                               for t in self.tracks])
+            dcls = np.asarray([-1 if d.get("class_id") is None
+                               else d["class_id"] for d in dets])
+            iou[tcls[:, None] != dcls[None, :]] = -1.0
             while True:
                 ti, di = np.unravel_index(np.argmax(iou), iou.shape)
                 if iou[ti, di] < cfg.iou_match:
@@ -130,14 +146,18 @@ class Tracker:
                 survivors.append(
                     Track(self._next_id, np.asarray(d["box"], np.float64),
                           np.zeros(2), float(d["score"]),
-                          float(d.get("scale", 1.0))))
+                          float(d.get("scale", 1.0)),
+                          class_id=d.get("class_id"),
+                          label=d.get("label")))
                 self._next_id += 1
         self.tracks = survivors
 
         out = [{"box": tuple(float(v) for v in t.box),
                 "score": t.score, "scale": t.scale,
                 "track_id": t.track_id, "hits": t.hits,
-                "misses": t.misses}
+                "misses": t.misses,
+                **({"class_id": t.class_id, "label": t.label}
+                   if t.class_id is not None else {})}
                for t in self.tracks
                if t.hits >= cfg.min_hits
                and (t.misses == 0 or cfg.emit_coasting)]

@@ -297,20 +297,33 @@ def make_clip(rng: np.random.Generator,
 
 
 def make_scene(rng: np.random.Generator, h: int = 320, w: int = 240,
-               n_people: int = 2) -> Tuple[np.ndarray, list]:
+               n_people: int = 2,
+               region: Tuple[int, int, int, int] = None
+               ) -> Tuple[np.ndarray, list]:
     """A larger scene with pasted pedestrians, for the sliding-window
-    detector example. Returns (rgb uint8 (h,w,3), list of (y,x,130,66) boxes)."""
+    detector example. Returns (rgb uint8 (h,w,3), list of (y,x,130,66)
+    boxes). `region` = (y0, x0, y1, x1) confines the paste positions to
+    a sub-rectangle -- the cascade bench (benchmarks/bench_timing.py)
+    uses it to build CLUSTERED scenes where people occupy one corner of
+    an otherwise empty frame, the sparse-traffic shape the coarse-reject
+    stage is built for."""
     cfg = PedestrianDataConfig()
     base = _background(rng, cfg)
     scene = np.clip(base + _smooth_noise(rng, h, w, 12)[:h, :w] * 10
                     if base.shape == (h, w) else
                     _smooth_noise(rng, h, w, 12) * 20 + rng.uniform(70, 170),
                     0, 255)
+    ry0, rx0, ry1, rx1 = (0, 0, h, w) if region is None else region
+    ry1 = min(ry1, h)
+    rx1 = min(rx1, w)
+    if ry1 - ry0 < H or rx1 - rx0 < W:
+        raise ValueError(f"region {(ry0, rx0, ry1, rx1)} cannot fit one "
+                         f"{H}x{W} window")
     boxes = []
     for _ in range(n_people):
         win = _positive(rng, cfg)
-        y0 = int(rng.integers(0, h - H))
-        x0 = int(rng.integers(0, w - W))
+        y0 = int(rng.integers(ry0, ry1 - H)) if ry1 - ry0 > H else ry0
+        x0 = int(rng.integers(rx0, rx1 - W)) if rx1 - rx0 > W else rx0
         scene[y0:y0 + H, x0:x0 + W] = win
         boxes.append((y0, x0, H, W))
     return _to_rgb(rng, scene, cfg.noise_std), boxes

@@ -132,6 +132,9 @@ class DetectionService:
                       "frames": 0, "frame_ms": 0.0, "frame_boxes": 0,
                       "frame_batches": 0, "frame_occupancy": 0.0,
                       "frame_rejects": 0, "frames_saturated": 0,
+                      # kept-box counts per head label on multi-class
+                      # sessions ({} until a labelled detection lands)
+                      "class_boxes": {},
                       "devices": self.devices,
                       "tile_devices": max(
                           1, getattr(self._detector, "frame_devices", 1)),
@@ -346,7 +349,7 @@ class DetectionService:
                 results = [batch.frame(i) for i in range(len(group))]
             # decode inside the timed region so per-frame ms keeps the
             # legacy meaning (device step + host decode)
-            dets_per = [(res.to_list(), bool(res.saturated))
+            dets_per = [(res.to_list(), bool(np.any(res.saturated)))
                         for res in results]
         except Exception:
             # batch failed as a whole: fall back to per-frame so one
@@ -355,7 +358,8 @@ class DetectionService:
             for r in group:
                 try:
                     res = self._detector.detect_raw(r.frame)
-                    dets_per.append((res.to_list(), bool(res.saturated)))
+                    dets_per.append((res.to_list(),
+                                     bool(np.any(res.saturated))))
                 except Exception as e:
                     dets_per.append(e)
         ms = (time.perf_counter() - t0) * 1e3 / len(group)
@@ -371,6 +375,10 @@ class DetectionService:
             self.stats["frames"] += 1
             self.stats["frames_saturated"] += int(saturated)
             self.stats["frame_boxes"] += len(dets)
+            for d in dets:                       # per-class serve stats
+                if "label" in d:
+                    cb = self.stats["class_boxes"]
+                    cb[d["label"]] = cb.get(d["label"], 0) + 1
             self.stats["frame_ms"] += (ms - self.stats["frame_ms"]) \
                 / self.stats["frames"]
             self._answer_frame(r, {"detections": dets, "ms": ms,

@@ -1,0 +1,329 @@
+"""Multi-head (stacked-classifier) detection: identity + class axis.
+
+The acceptance bar of the multi-head subsystem (DESIGN.md §13) is
+BYTE-identity, not closeness: scoring K stacked heads through the one
+widened (BH*BW, 36) @ (36, 105*K) matmul must reproduce each head's
+single-head program bit for bit, in every numerics mode --
+
+  * float32 / bf16: the widened matmul only appends columns; each
+    column is the same 36-element dot product the single-head program
+    computes, and the shifted-add collate runs per head plane in the
+    single-head accumulation order;
+  * int8 "fixed": quantization scales are per COLUMN
+    (quant.quantize_weight_columns), so head k's codes in the widened
+    weight matrix equal its single-head codes exactly and the integer
+    accumulation is order-free.
+
+K=1 stacked must equal the plain single-head path (the legacy program),
+per-class NMS must be class-isolated (head k's keep decisions never see
+head j's boxes), and the class axis must thread through Detections,
+session subsets, the registry round-trip, and tracker association.
+"""
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.detector import DetectorConfig, FrameDetector, nms_keep
+from repro.core.heads import HeadRegistry
+from repro.core.hog import HOGConfig
+
+SEED = 7
+
+
+def _mk_heads(n, f, rng):
+    return [{"w": rng.normal(0, 0.05, (f,)).astype(np.float32),
+             "b": np.float32(rng.normal() * 0.01)} for _ in range(n)]
+
+
+def _stack(heads):
+    return {"w": np.stack([h["w"] for h in heads]),
+            "b": np.asarray([h["b"] for h in heads], np.float32)}
+
+
+def _frame(rng, h=200, w=160):
+    return rng.integers(0, 255, (h, w, 3), np.uint8)
+
+
+def _raw(det):
+    return (np.asarray(det._scores), np.asarray(det._index),
+            np.asarray(det._keep), np.asarray(det._n_valid))
+
+
+MODES = [("float", "f32"), ("float", "bf16"), ("fixed", "f32")]
+
+
+@pytest.mark.parametrize("numerics,feat", MODES)
+def test_stacked_byte_identical_to_per_head(numerics, feat):
+    rng = np.random.default_rng(SEED)
+    hog = HOGConfig(numerics=numerics, feat_dtype=feat)
+    cfg = DetectorConfig(hog=hog, score_threshold=-3.0)
+    frame = _frame(rng)
+    heads = _mk_heads(3, hog.n_features, rng)
+    multi = FrameDetector(_stack(heads), cfg).detect_raw(frame)
+    for k, head in enumerate(heads):
+        single = FrameDetector(head, cfg).detect_raw(frame)
+        s, i, kp, nv = _raw(multi.for_class(k))
+        s1, i1, kp1, nv1 = _raw(single)
+        assert np.array_equal(s, s1), f"head {k} scores differ ({numerics})"
+        assert np.array_equal(i, i1)
+        assert np.array_equal(kp, kp1)
+        assert int(nv) == int(nv1)
+
+
+@pytest.mark.parametrize("numerics,feat", MODES)
+def test_k1_byte_identical_to_single_head_path(numerics, feat):
+    """A one-head stack must reproduce the legacy single-head program
+    exactly -- the K=1 detector is the same detector."""
+    rng = np.random.default_rng(SEED + 1)
+    hog = HOGConfig(numerics=numerics, feat_dtype=feat)
+    cfg = DetectorConfig(hog=hog, score_threshold=-3.0)
+    frame = _frame(rng)
+    head = _mk_heads(1, hog.n_features, rng)[0]
+    single = FrameDetector(head, cfg).detect_raw(frame)
+    one = FrameDetector(_stack([head]), cfg).detect_raw(frame)
+    s, i, kp, nv = _raw(one.for_class(0))
+    s1, i1, kp1, nv1 = _raw(single)
+    assert np.array_equal(s, s1)
+    assert np.array_equal(i, i1)
+    assert np.array_equal(kp, kp1)
+    assert int(nv) == int(nv1)
+
+
+def test_batched_multihead_matches_single_frame():
+    rng = np.random.default_rng(SEED + 2)
+    cfg = DetectorConfig(score_threshold=-3.0)
+    heads = _mk_heads(2, cfg.hog.n_features, rng)
+    det = FrameDetector(_stack(heads), cfg)
+    frames = [_frame(rng), _frame(rng), _frame(rng)]
+    batch = det.detect_batch_raw(frames)
+    assert batch.batched and batch.classes == ("head0", "head1")
+    for i, f in enumerate(frames):
+        s, ix, kp, nv = _raw(det.detect_raw(f))
+        sb, ixb, kpb, nvb = _raw(batch.frame(i))
+        assert np.array_equal(s, sb) and np.array_equal(kp, kpb)
+        assert np.array_equal(ix, ixb) and np.array_equal(nv, nvb)
+
+
+# ---------------------------------------------------- per-class NMS
+
+def _per_class_keep(boxes, scores, thr):
+    """Reference: run device NMS independently per class row."""
+    import jax.numpy as jnp
+    return np.stack([np.asarray(nms_keep(jnp.asarray(boxes[k]),
+                                         jnp.asarray(scores[k]), thr))
+                     for k in range(boxes.shape[0])])
+
+
+def check_class_isolation(rng):
+    """Identical boxes in two classes: per-class NMS keeps BOTH (no
+    cross-class suppression), and each class's keep set equals the
+    class-independent reference."""
+    import jax
+    n, thr = 12, 0.3
+    y0 = rng.uniform(0, 100, n)
+    x0 = rng.uniform(0, 100, n)
+    boxes = np.stack([y0, x0, y0 + rng.uniform(5, 60, n),
+                      x0 + rng.uniform(5, 60, n)], -1).astype(np.float32)
+    scores = np.sort(rng.uniform(0.1, 5.0, (2, n)).astype(np.float32),
+                     axis=1)[:, ::-1].copy()
+    stacked_boxes = np.stack([boxes, boxes])
+    keep = np.asarray(jax.vmap(nms_keep, in_axes=(0, 0, None))(
+        stacked_boxes, scores, thr))
+    ref = _per_class_keep(stacked_boxes, scores, thr)
+    assert np.array_equal(keep, ref)
+    # both classes keep their own top box even though the boxes overlap
+    # perfectly across classes
+    assert keep[0, 0] and keep[1, 0]
+
+
+def test_class_isolation_seeded():
+    rng = np.random.default_rng(SEED + 3)
+    for _ in range(25):
+        check_class_isolation(rng)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_class_isolation_hypothesis(seed):
+    check_class_isolation(np.random.default_rng(seed))
+
+
+# ------------------------------------------------- Detections class axis
+
+def test_detections_class_axis_api():
+    rng = np.random.default_rng(SEED + 4)
+    cfg = DetectorConfig(score_threshold=-3.0)
+    heads = _mk_heads(2, cfg.hog.n_features, rng)
+    det = FrameDetector(_stack(heads), cfg,
+                        classes=("pedestrian", "vehicle"))
+    d = det.detect_raw(_frame(rng))
+    assert d.classes == ("pedestrian", "vehicle")
+    lst = d.to_list()
+    assert lst and all({"box", "score", "scale", "class_id",
+                        "label"} <= set(e) for e in lst)
+    assert {e["label"] for e in lst} <= {"pedestrian", "vehicle"}
+    assert all(lst[i]["score"] >= lst[i + 1]["score"]
+               for i in range(len(lst) - 1))
+    # for_class slices back to the single-head contract
+    ped = d.for_class("pedestrian")
+    assert ped.classes is None
+    assert len(ped.to_list()) == sum(e["class_id"] == 0 for e in lst)
+    # saturated keeps the class axis
+    assert np.shape(d.saturated) == (2,)
+    # stack/frame round-trip with classes
+    from repro.api.results import Detections
+    b = Detections.stack([d, d])
+    assert b.batched and b.batch_size == 2 and b.classes == d.classes
+    s, i, kp, nv = _raw(b.frame(1))
+    assert np.array_equal(s, np.asarray(d._scores))
+    assert np.shape(nv) == (2,)
+
+
+def test_detections_class_axis_empty():
+    from repro.api.results import Detections
+    from repro.core.detector import DecodeTables
+    t = DecodeTables(np.zeros((0, 4), np.float32),
+                     np.zeros((0,), np.float32), 0)
+    e = Detections.empty(t, classes=("a", "b"))
+    assert e.to_list() == [] and not e.batched
+    eb = Detections.empty_batch(t, 3, classes=("a", "b"))
+    assert eb.batched and eb.to_list() == [[], [], []]
+
+
+# ----------------------------------------------------------- registry
+
+def test_registry_stacking_and_thresholds():
+    rng = np.random.default_rng(SEED + 5)
+    f = 3780
+    heads = _mk_heads(3, f, rng)
+    reg = HeadRegistry()
+    reg.add("ped", heads[0], threshold=0.5)
+    reg.add("veh", heads[1])
+    reg.add("_coarse", heads[2])           # auxiliary: excluded
+    assert reg.names == ("ped", "veh")
+    svm, names, thr = reg.stacked()
+    assert svm["w"].shape == (2, f) and svm["b"].shape == (2,)
+    assert names == ("ped", "veh") and thr == (0.5, None)
+    np.testing.assert_array_equal(svm["w"][0], heads[0]["w"])
+    # explicit subsets (order = class order) and aux inclusion
+    _, names2, _ = reg.stacked(("veh", "ped"))
+    assert names2 == ("veh", "ped")
+    svm3, _, _ = reg.stacked(("_coarse",))
+    np.testing.assert_array_equal(svm3["w"][0], heads[2]["w"])
+    with pytest.raises(KeyError):
+        reg.stacked(("nope",))
+    with pytest.raises(ValueError):
+        reg.add("ped", heads[0])           # no silent overwrite
+    # mixed geometry only fails at stacking time
+    reg.add("_tiny", {"w": np.zeros(756, np.float32), "b": 0.0})
+    with pytest.raises(ValueError):
+        reg.stacked(("ped", "_tiny"))
+
+
+def test_registry_checkpoint_round_trip(tmp_path):
+    rng = np.random.default_rng(SEED + 6)
+    heads = _mk_heads(2, 3780, rng)
+    reg = HeadRegistry()
+    reg.add("ped", heads[0], threshold=0.25, metadata={"v": 1})
+    reg.add("_coarse", {"w": rng.normal(size=756).astype(np.float32),
+                        "b": 0.5})
+    path = os.path.join(str(tmp_path), "ckpt")
+    reg.save(path)
+    assert HeadRegistry.is_registry_checkpoint(path)
+    back = HeadRegistry.load(path)
+    assert back.names == ("ped",) and "_coarse" in back
+    assert back.get("ped").threshold == 0.25
+    assert back.get("ped").metadata == {"v": 1}
+    np.testing.assert_array_equal(back.get("ped").params["w"],
+                                  reg.get("ped").params["w"])
+    np.testing.assert_array_equal(back.get("_coarse").params["w"],
+                                  reg.get("_coarse").params["w"])
+
+
+def test_session_class_subsets_and_round_trip(tmp_path):
+    from repro.api import DetectionSession
+    rng = np.random.default_rng(SEED + 7)
+    cfg = DetectorConfig(score_threshold=-1.0)
+    heads = _mk_heads(2, cfg.hog.n_features, rng)
+    reg = HeadRegistry()
+    reg.add("a", heads[0])
+    reg.add("b", heads[1], threshold=50.0)   # gated far above any score
+    from repro.api.config import PipelineConfig
+    sess = DetectionSession(reg, PipelineConfig(hog=cfg.hog, detector=cfg))
+    frame = _frame(rng)
+    both = sess.detect(frame).to_list()
+    assert {d["label"] for d in both} == {"a"}, \
+        "head b's per-class threshold must gate all its windows"
+    only_a = sess.detect(frame, classes="a").to_list()
+    assert [d["box"] for d in only_a] == \
+        [d["box"] for d in both if d["label"] == "a"]
+    # single-head sessions reject class subsets
+    single = DetectionSession(heads[0],
+                              PipelineConfig(hog=cfg.hog, detector=cfg))
+    with pytest.raises(ValueError):
+        single.detect(frame, classes="a")
+    # session save/load keeps the registry form
+    p = os.path.join(str(tmp_path), "s")
+    sess.save(p)
+    back = DetectionSession.load(p, PipelineConfig(hog=cfg.hog,
+                                                   detector=cfg))
+    assert back.registry is not None
+    assert back.detect(frame).to_list() == both
+
+
+def test_multihead_rejects_frame_parallel():
+    rng = np.random.default_rng(SEED + 8)
+    cfg = DetectorConfig(score_threshold=-1.0, frame_parallel=0,
+                         frame_parallel_min_area=0)
+    heads = _mk_heads(2, cfg.hog.n_features, rng)
+    det = FrameDetector(_stack(heads), cfg)
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices to resolve a tile axis")
+    with pytest.raises(ValueError, match="frame_parallel"):
+        det.detect_raw(_frame(rng))
+
+
+# ------------------------------------------------ tracker class gating
+
+def _det(box, score, cid=None, label=None):
+    d = {"box": box, "score": score, "scale": 1.0}
+    if cid is not None:
+        d["class_id"] = cid
+        d["label"] = label or f"c{cid}"
+    return d
+
+
+def test_tracker_gates_association_on_class():
+    from repro.core.video import Tracker
+    trk = Tracker()
+    box = (10.0, 10.0, 140.0, 76.0)
+    near = (12.0, 11.0, 142.0, 77.0)
+    out0 = trk.update([_det(box, 1.0, 0)])
+    # a perfectly overlapping detection of ANOTHER class must open a
+    # new track, not steal the pedestrian's id
+    out1 = trk.update([_det(near, 1.0, 1)])
+    assert out0[0]["track_id"] != out1[0]["track_id"]
+    assert out1[0]["class_id"] == 1
+    # ...while the same class keeps matching its track
+    out2 = trk.update([_det(near, 1.0, 0), _det(box, 0.9, 1)])
+    by_cls = {d["class_id"]: d for d in out2}
+    assert by_cls[0]["track_id"] == out0[0]["track_id"]
+    assert by_cls[1]["track_id"] == out1[0]["track_id"]
+    assert by_cls[0]["hits"] == 2 and by_cls[1]["hits"] == 2
+
+
+def test_tracker_classless_behavior_unchanged():
+    from repro.core.video import Tracker
+    trk = Tracker()
+    box = (10.0, 10.0, 140.0, 76.0)
+    near = (12.0, 11.0, 142.0, 77.0)
+    t0 = trk.update([_det(box, 1.0)])
+    t1 = trk.update([_det(near, 1.0)])
+    assert t0[0]["track_id"] == t1[0]["track_id"]
+    assert "class_id" not in t1[0]
