@@ -1131,6 +1131,72 @@ def run_cascade(fast: bool = False) -> dict:
     return row
 
 
+def run_resilience(fast: bool = False) -> dict:
+    """Chaos benchmark: the supervised engine under the standard fault
+    schedule (serve/faults.py chaos_specs -- worker kill, device loss,
+    latency spikes) vs an unperturbed run on the SAME frames.
+
+    Records wall-clock overhead of surviving the faults, restart and
+    retry counts, and the liveness gate the chaos-smoke CI lane
+    enforces: every future resolves, detections are byte-identical to
+    the clean run, and stop() returns. Exits 1 on any liveness miss.
+    """
+    from repro.serve.engine import DetectionService
+    from repro.serve.faults import FaultInjector, chaos_specs
+
+    n = 10 if fast else 24
+    h, w = 160, 128
+    rng = np.random.default_rng(11)
+    svm = {"w": jnp.asarray(rng.normal(size=3780).astype(np.float32) * .01),
+           "b": jnp.float32(0.0)}
+    det = DetectorConfig(score_threshold=-10.0, scales=(1.0,))
+    frames = [rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+              for _ in range(n)]
+
+    def _run(faults):
+        svc = DetectionService(svm, detector=det, frame_batch=1,
+                               max_wait_ms=1.0, faults=faults).start()
+        t0 = time.perf_counter()
+        res = svc.detect_frames(frames, timeout=180)
+        wall = time.perf_counter() - t0
+        stats = dict(svc.stats)
+        svc.stop()
+        return res, wall, stats
+
+    _run(None)                       # warm the compiled program
+    clean, t_clean, _ = _run(None)
+    inj = FaultInjector(chaos_specs(), seed=0)
+    chaos, t_chaos, stats = _run(inj)
+
+    resolved = len(chaos) == n and all(isinstance(r, dict) for r in chaos)
+    identical = all(c.get("detections") == r.get("detections")
+                    for c, r in zip(chaos, clean))
+    ok = (resolved and identical and stats["restarts"] >= 1
+          and stats["frame_answers"] == n)
+    row = {"frame": f"{w}x{h}", "frames": n,
+           "clean_ms_per_frame": t_clean * 1e3 / n,
+           "chaos_ms_per_frame": t_chaos * 1e3 / n,
+           "chaos_overhead_x": t_chaos / max(t_clean, 1e-9),
+           "fired": [list(f) for f in inj.fired],
+           "restarts": stats["restarts"], "retries": stats["retries"],
+           "worker_failures": stats["worker_failures"],
+           "deadline_shed": stats["deadline_shed"],
+           "latency_ms": stats["latency_ms"],
+           "breaker": stats["breaker"], "ok": bool(ok)}
+    print("# resilience -- supervised engine under the chaos schedule")
+    print(f"resilience/clean_ms,{t_clean*1e3/n:.1f},per frame, no faults")
+    print(f"resilience/chaos_ms,{t_chaos*1e3/n:.1f},per frame under "
+          f"kill+device-loss+latency")
+    print(f"resilience/overhead,{t_chaos/max(t_clean,1e-9):.2f}x,"
+          f"restarts={stats['restarts']} retries={stats['retries']}")
+    print(f"resilience/identical,{identical},chaos vs clean detections,"
+          f"gate=True")
+    print(f"resilience/resolved,{resolved},all {n} futures,gate=True")
+    _update_bench(resilience=row)
+    print(f"resilience/json,{BENCH_JSON.name},written")
+    return row
+
+
 if __name__ == "__main__":
     import argparse
     import sys
@@ -1172,11 +1238,18 @@ if __name__ == "__main__":
                          "dense pass on the synthetic clustered/empty "
                          "mix); exits 1 when retention < 0.99 or "
                          "speedup < 1.5")
+    ap.add_argument("--resilience", action="store_true",
+                    help="measure + record the chaos section (clean vs "
+                         "fault-injected serving on the same frames); "
+                         "exits 1 when a future fails to resolve or "
+                         "chaos detections differ from the clean run")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="--check: allowed regression fraction "
                          "(default 0.15 = 15%%)")
     a = ap.parse_args()
-    if a.multiclass:
+    if a.resilience:
+        sys.exit(0 if run_resilience(fast=a.fast)["ok"] else 1)
+    elif a.multiclass:
         sys.exit(0 if run_multiclass(fast=a.fast)["ok"] else 1)
     elif a.cascade:
         sys.exit(0 if run_cascade(fast=a.fast)["ok"] else 1)

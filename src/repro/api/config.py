@@ -47,6 +47,11 @@ Presets fold in the paper-workload variants from configs/hog_svm.py:
                           tracker-predicted boxes promoted past the
                           coarse gate on video (core/cascade.py,
                           DESIGN.md §13)
+    presets("resilient")  the serving-SLO variant: 500 ms per-request
+                          deadlines, supervised-worker retry/backoff, a
+                          5-failure circuit breaker, and the cascade-
+                          backed degradation ladder (p99 >= 120 ms or
+                          32 pending frames drops a rung; DESIGN.md §14)
     presets("default")    the plain DetectorConfig defaults
 
 `presets()` lists the registered names; `register_preset` adds
@@ -63,6 +68,7 @@ from repro.core.detector import DetectorConfig
 from repro.core.hog import HOGConfig, PAPER_HOG
 from repro.core.svm import SVMTrainConfig
 from repro.core.video import TrackerConfig
+from repro.serve.resilience import ResilienceConfig, RetryPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +79,10 @@ class ServiceConfig:
     max_wait_ms: float = 2.0      # straggler deadline when coalescing
     frame_batch: int = 8          # frames per batched detection step
     max_pending_frames: int = 256  # backpressure bound (ServiceOverloaded)
+    # deadlines / retry / breaker / degradation ladder (DESIGN.md §14);
+    # the defaults are inert -- supervision and transient retry are
+    # always on, deadlines and the ladder only when configured
+    resilience: ResilienceConfig = ResilienceConfig()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,6 +237,23 @@ def _register_builtin() -> None:
         detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5),
         train=hog_svm.TRAIN,
         cascade=CascadeConfig(enabled=True)))
+    # resilient: the serving-SLO deployment -- 500 ms request budgets
+    # shed doomed work pre-compute, the cascade rungs back the
+    # degradation ladder (full -> cascade -> coarse on overload, with
+    # hysteresis), and the breaker fail-fasts admission after repeated
+    # worker deaths (serve/resilience.py, DESIGN.md §14).
+    register_preset("resilient", PipelineConfig(
+        name="resilient", hog=hog_svm.CONFIG,
+        detector=DetectorConfig(hog=hog_svm.CONFIG, score_threshold=0.5),
+        train=hog_svm.TRAIN,
+        cascade=CascadeConfig(enabled=True),
+        service=ServiceConfig(resilience=ResilienceConfig(
+            deadline_ms=500.0,
+            retry=RetryPolicy(max_attempts=3, backoff_base_ms=5.0,
+                              backoff_cap_ms=200.0),
+            breaker_failures=5, breaker_reset_s=5.0,
+            degrade_p99_ms=120.0, degrade_depth=32,
+            recover_dwell=3))))
 
 
 _register_builtin()

@@ -266,7 +266,11 @@ class DetectionSession:
     def serve(self, **overrides) -> "DetectionService":
         """Build a DetectionService on THIS session's detector and
         config (service knobs from config.service; any engine kwarg can
-        be overridden). Caller starts/stops it."""
+        be overridden). Resilience knobs ride along from
+        config.service.resilience, and a cascade-enabled config wires
+        the session's CascadeDetector as the service's degradation
+        rungs (full -> cascade -> coarse, DESIGN.md §14). Caller
+        starts/stops it."""
         from repro.serve.engine import DetectionService
         sc = self.config.service
         opts = dict(batch_size=sc.window_batch,
@@ -275,13 +279,16 @@ class DetectionSession:
                     max_wait_ms=sc.max_wait_ms,
                     detector=self.config.detector,
                     frame_batch=sc.frame_batch,
-                    max_pending_frames=sc.max_pending_frames)
+                    max_pending_frames=sc.max_pending_frames,
+                    resilience=sc.resilience)
         # an explicit detector override builds its own FrameDetector;
         # otherwise the service shares this session's handle (and with
         # it every already-compiled program). frame_detector rides in
         # opts so callers can override it like any other engine kwarg.
         opts["frame_detector"] = \
             None if "detector" in overrides else self.detector
+        if self.config.cascade.enabled and "cascade" not in overrides:
+            opts["cascade"] = self.cascade()
         opts.update(overrides)
         return DetectionService(self.svm, **opts)
 

@@ -4,10 +4,23 @@ Layout (one directory per step):
     ckpt_dir/step_000100.tmp/...   (written, fsync'd)
     ckpt_dir/step_000100/          (atomic rename = commit)
 Leaves are stored as raw .npy files keyed by pytree path; metadata.json
-carries the step and tree structure. Restore takes a target
-shape/sharding pytree, so a checkpoint written on one mesh restores onto
-ANY mesh (elastic scaling): values are read on host and device_put with
-the new NamedShardings.
+carries the step and tree structure and is written LAST, so its
+presence in a .tmp dir is the completion marker the crash-recovery
+scan keys on. Restore takes a target shape/sharding pytree, so a
+checkpoint written on one mesh restores onto ANY mesh (elastic
+scaling): values are read on host and device_put with the new
+NamedShardings.
+
+Crash safety: every file is fsync'd before the commit rename and the
+PARENT DIRECTORY is fsync'd after it (a rename the directory never
+made durable can vanish on power loss). Re-committing an existing step
+swaps the old dir to `<name>.old` first -- never an rmtree-then-rename
+window with NO valid checkpoint on disk -- and `__init__` runs
+`_recover()`: complete .tmp dirs (metadata.json present) are finished,
+truncated ones removed, and an orphaned .old is restored when its
+commit is missing. `atomic_write_json` is the same temp+fsync+rename
+discipline for single manifests (core/heads.py uses it for
+heads.json).
 
 Async: `save_async` snapshots to host (device_get) synchronously -- the
 only part that must be consistent -- then writes in a daemon thread so
@@ -28,6 +41,35 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename inside it survives power loss
+    (no-op on filesystems that refuse O_RDONLY dir fds)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:          # pragma: no cover -- exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    except OSError:          # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
+def atomic_write_json(path: str, obj: Any, **json_kw) -> None:
+    """Durable single-file JSON write: temp file in the target's
+    directory, fsync, rename over the destination, fsync the
+    directory. A reader never observes a truncated file."""
+    d = os.path.dirname(os.path.abspath(path))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, **json_kw)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(d)
+
+
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -37,18 +79,57 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _step_of(name: str) -> Optional[int]:
+    """step_00000100 -> 100; None for .tmp/.old/foreign entries."""
+    if not name.startswith("step_"):
+        return None
+    digits = name[len("step_"):]
+    return int(digits) if digits.isdigit() else None
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._recover()
+
+    # --------------------------------------------------- crash recovery
+    def _recover(self) -> None:
+        """Settle the debris of a writer killed mid-save.
+
+        .tmp with metadata.json  -> every leaf was written and fsync'd
+                                    (metadata is written last): finish
+                                    the commit.
+        .tmp without             -> truncated write: remove.
+        .old with no commit      -> the swap's rename never happened:
+                                    restore the old checkpoint.
+        .old with a commit       -> superseded: remove.
+        """
+        for name in sorted(os.listdir(self.dir)):
+            p = os.path.join(self.dir, name)
+            if name.endswith(".tmp"):
+                final = p[:-len(".tmp")]
+                if (os.path.exists(os.path.join(p, "metadata.json"))
+                        and not os.path.exists(final)):
+                    os.rename(p, final)
+                else:
+                    shutil.rmtree(p, ignore_errors=True)
+            elif name.endswith(".old"):
+                final = p[:-len(".old")]
+                if os.path.exists(final):
+                    shutil.rmtree(p, ignore_errors=True)
+                else:
+                    os.rename(p, final)
+        _fsync_dir(self.dir)
 
     # ------------------------------------------------------------- save
     def _write(self, step: int, flat: Dict[str, np.ndarray]) -> None:
         name = f"step_{step:08d}"
         tmp = os.path.join(self.dir, name + ".tmp")
         final = os.path.join(self.dir, name)
+        old = os.path.join(self.dir, name + ".old")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
@@ -58,14 +139,22 @@ class CheckpointManager:
                 np.save(f, arr)
                 f.flush()
                 os.fsync(f.fileno())
+        # metadata LAST: its presence marks the .tmp complete (recovery
+        # finishes such a dir instead of discarding it)
         meta = {"step": step, "keys": sorted(flat.keys())}
         with open(os.path.join(tmp, "metadata.json"), "w") as f:
             json.dump(meta, f)
             f.flush()
             os.fsync(f.fileno())
         if os.path.exists(final):
-            shutil.rmtree(final)
+            # swap, don't rmtree-then-rename: a crash between those two
+            # would leave NO valid copy of this step on disk
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.rename(final, old)
         os.rename(tmp, final)            # atomic commit
+        _fsync_dir(self.dir)             # make the commit durable
+        shutil.rmtree(old, ignore_errors=True)
         self._gc()
 
     def save(self, step: int, tree: Any) -> None:
@@ -86,10 +175,8 @@ class CheckpointManager:
 
     # ---------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
-        steps = []
-        for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                steps.append(int(d.split("_")[1]))
+        steps = [s for s in (_step_of(d) for d in os.listdir(self.dir))
+                 if s is not None]
         return max(steps) if steps else None
 
     def restore(self, step: int, target: Any,
@@ -120,10 +207,9 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- gc
     def _gc(self) -> None:
-        steps = sorted(s for s in (self.latest_step(),) if s is not None)
-        all_steps = sorted(int(d.split("_")[1])
-                           for d in os.listdir(self.dir)
-                           if d.startswith("step_") and not d.endswith(".tmp"))
+        all_steps = sorted(
+            s for s in (_step_of(d) for d in os.listdir(self.dir))
+            if s is not None)
         for s in all_steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)

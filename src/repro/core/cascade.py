@@ -179,6 +179,21 @@ def plan_regions(boxes, frame_hw: Tuple[int, int],
     return sorted(_snap_regions(bounds, (h, w), max(1, cfg.snap)))
 
 
+# ----------------------------------------------------- degraded entry points
+
+def reduced_detector(det: FrameDetector, n_scales: int = 1
+                     ) -> FrameDetector:
+    """Degradation-ladder rung "reduced" (serve/resilience.py): the SAME
+    head and numerics on a truncated pyramid -- only the first
+    `n_scales` scales are swept, so far-away (small) pedestrians are
+    the quality traded for latency under overload. Shares the svm
+    params and class labels, so recovered full-pipeline results are
+    byte-identical to an undegraded run."""
+    cfg = dataclasses.replace(det.cfg,
+                              scales=det.cfg.scales[:max(1, int(n_scales))])
+    return FrameDetector(det.svm, cfg, classes=det.classes)
+
+
 # ------------------------------------------------------------ coarse head
 
 def coarse_hog(fine: HOGConfig) -> HOGConfig:
@@ -326,6 +341,28 @@ class CascadeDetector:
                 d["box"] = (by0 + y0, bx0 + x0, by1 + y0, bx1 + x0)
                 dets.append(d)
         return self._merge(dets)
+
+    def detect_degraded(self, frame, mode: str = "cascade",
+                        roi_boxes: Sequence = ()) -> List[dict]:
+        """Degraded-mode entry point for the serving ladder
+        (serve/resilience.py): "cascade" runs the normal two-stage
+        schedule (coarse reject + fine on survivors), "coarse" serves
+        the stage-1 hits ALONE -- no fine pass at all, the cheapest
+        rung. Coarse-only detections carry `stage="coarse"` so callers
+        can tell the quality class apart; their scores are the coarse
+        head's margins and are NOT comparable to fine-stage scores."""
+        if mode == "cascade":
+            return self.detect(frame, roi_boxes=roi_boxes)
+        if mode != "coarse":
+            raise ValueError(f"unknown degraded mode {mode!r}; "
+                             f"'cascade' or 'coarse'")
+        self.stats["frames"] += 1
+        dets = []
+        for d in self.coarse.detect_raw(np.asarray(frame)).to_list():
+            d = dict(d)
+            d["stage"] = "coarse"
+            dets.append(d)
+        return dets
 
     def stream(self, frames, tracker=None) -> List[List[dict]]:
         """Video path: frame-at-a-time cascade with tracker-guided ROI

@@ -168,12 +168,9 @@ class HeadRegistry:
                        "n_features": h.n_features,
                        "metadata": h.metadata} for h in self._heads.values()],
         }
-        tmp = os.path.join(path, HEADS_MANIFEST + ".tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f, indent=2)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, os.path.join(path, HEADS_MANIFEST))
+        from repro.checkpoint.manager import atomic_write_json
+        atomic_write_json(os.path.join(path, HEADS_MANIFEST), manifest,
+                          indent=2)
 
     @classmethod
     def load(cls, path: str, step: Optional[int] = None) -> "HeadRegistry":

@@ -13,6 +13,11 @@ and prints per-frame latency, saturation, and service stats.
 
     PYTHONPATH=src python -m repro.launch.serve --detect [--frames 6]
         [--preset paper] [--load DIR]
+
+`--detect --chaos` replays the standard fault-injection schedule
+(serve/faults.py chaos_specs: worker kill, device loss, latency
+spikes) through the supervised engine and exits nonzero unless every
+submitted frame resolved -- the CLI face of the chaos-smoke CI lane.
 """
 from __future__ import annotations
 
@@ -47,7 +52,13 @@ def _detect_smoke(args) -> int:
         print(f"training a quick SVM ({cfg.train.steps} steps) ...")
         session = DetectionSession.train(cfg, n_pos=500, n_neg=350)
 
-    service = session.serve().start()
+    opts = {}
+    if args.chaos:
+        from repro.serve.faults import FaultInjector, chaos_specs
+        opts["faults"] = FaultInjector(chaos_specs(), seed=0)
+        print("chaos: injecting worker-kill, device-loss, and latency "
+              "faults (serve/faults.py chaos_specs)")
+    service = session.serve(**opts).start()
     rng = np.random.default_rng(0)
     frames = [make_scene(rng, 240, 320, n_people=2)[0]
               for _ in range(args.frames)]
@@ -59,6 +70,7 @@ def _detect_smoke(args) -> int:
     ms = [r["ms"] for r in results]
     n_sat = sum(bool(r.get("saturated")) for r in results)
     n_box = sum(len(r["detections"]) for r in results)
+    n_err = sum("error" in r for r in results)
     if len(ms) > 1:
         print(f"wall          {wall:.2f}s  first={ms[0]:.0f} ms "
               f"(compile), steady={np.mean(ms[1:]):.0f} ms")
@@ -69,7 +81,18 @@ def _detect_smoke(args) -> int:
     print(f"service stats frames={s['frames']} "
           f"batches={s['frame_batches']} "
           f"occupancy={s['frame_occupancy']:.2f}")
+    lat = s["latency_ms"]
+    print(f"resilience    p50={lat['p50']:.0f}ms p99={lat['p99']:.0f}ms "
+          f"shed={s['deadline_shed']} retries={s['retries']} "
+          f"restarts={s['restarts']} "
+          f"breaker={s['breaker']['state']} rung={s['degraded_mode']}")
     service.stop()
+    if args.chaos:
+        # liveness gate: every future resolved, chaos or not
+        resolved = s["frame_answers"] == len(frames)
+        print(f"chaos         fired={opts['faults'].fired} "
+              f"errors={n_err} all_resolved={resolved}")
+        return 0 if resolved else 1
     return 0
 
 
@@ -88,6 +111,10 @@ def main(argv=None):
                     help="frames to stream in --detect mode")
     ap.add_argument("--preset", default=None,
                     help="PipelineConfig preset for --detect")
+    ap.add_argument("--chaos", action="store_true",
+                    help="--detect: run under the standard fault-"
+                         "injection schedule (worker kill, device "
+                         "loss, latency spikes) and gate on liveness")
     ap.add_argument("--load", metavar="DIR", default=None,
                     help="--detect: restore SVM params from a "
                          "checkpoint dir instead of training")

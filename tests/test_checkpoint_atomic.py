@@ -1,0 +1,139 @@
+"""Crash-safety of checkpoint/manager.py (PR 9 satellite).
+
+The invariant: at EVERY instant during a save -- including re-saving an
+existing step -- at least one complete, readable copy of the newest
+committed checkpoint exists on disk, and a writer killed at any point
+leaves debris the next CheckpointManager() silently settles
+(`_recover`): complete .tmp dirs commit, truncated ones vanish,
+orphaned .old dirs restore. heads.json rides the same discipline via
+`atomic_write_json`.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointManager, atomic_write_json,
+                                      _step_of)
+
+TREE = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.float32(2.5)}
+
+
+def _assert_restores(mgr, step, expect_w):
+    got = mgr.restore(step, {"w": np.zeros((2, 3), np.float32),
+                             "b": np.float32(0)})
+    np.testing.assert_array_equal(np.asarray(got["w"]), expect_w)
+
+
+def test_save_leaves_no_debris(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, TREE)
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000001"]          # no .tmp, no .old
+    _assert_restores(mgr, 1, TREE["w"])
+
+
+def test_resave_same_step_keeps_a_valid_copy(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, TREE)
+    newer = {"w": TREE["w"] + 1, "b": TREE["b"]}
+    mgr.save(1, newer)                         # overwrite commit
+    assert sorted(os.listdir(tmp_path)) == ["step_00000001"]
+    _assert_restores(mgr, 1, TREE["w"] + 1)
+
+
+def test_recover_finishes_complete_tmp(tmp_path):
+    """Writer killed AFTER metadata.json but BEFORE the commit rename:
+    every byte is on disk, so recovery completes the commit."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, TREE)
+    # forge the crash: demote the committed dir back to .tmp
+    os.rename(tmp_path / "step_00000002", tmp_path / "step_00000002.tmp")
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert sorted(os.listdir(tmp_path)) == ["step_00000002"]
+    assert mgr2.latest_step() == 2
+    _assert_restores(mgr2, 2, TREE["w"])
+
+
+def test_recover_discards_truncated_tmp(tmp_path):
+    """Writer killed mid-leaf-write: no metadata.json, so the .tmp is
+    debris -- removed, never surfaced as a checkpoint."""
+    d = tmp_path / "step_00000003.tmp"
+    d.mkdir()
+    (d / "w.npy").write_bytes(b"\x93NUMPY-truncat")
+    mgr = CheckpointManager(str(tmp_path))
+    assert os.listdir(tmp_path) == []
+    assert mgr.latest_step() is None
+
+
+def test_recover_restores_orphaned_old(tmp_path):
+    """Writer killed between `final -> .old` and `tmp -> final`: the
+    .old IS the newest complete copy -- restored, not deleted."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, TREE)
+    os.rename(tmp_path / "step_00000004", tmp_path / "step_00000004.old")
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert sorted(os.listdir(tmp_path)) == ["step_00000004"]
+    _assert_restores(mgr2, 4, TREE["w"])
+
+
+def test_recover_drops_superseded_old(tmp_path):
+    """.old next to a committed step is a leftover from a completed
+    re-save: removed."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, TREE)
+    old = tmp_path / "step_00000005.old"
+    old.mkdir()
+    (old / "metadata.json").write_text("{}")
+    CheckpointManager(str(tmp_path))
+    assert sorted(os.listdir(tmp_path)) == ["step_00000005"]
+
+
+def test_latest_step_ignores_debris_and_foreign_names(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, TREE)
+    (tmp_path / "step_00000009.tmp").mkdir()
+    (tmp_path / "step_00000008.old").mkdir()
+    (tmp_path / "heads.json").write_text("{}")
+    (tmp_path / "step_notanumber").mkdir()
+    assert mgr.latest_step() == 7
+    assert _step_of("step_00000042") == 42
+    assert _step_of("step_00000042.tmp") is None
+    assert _step_of("step_00000042.old") is None
+    assert _step_of("notes.txt") is None
+
+
+def test_gc_keeps_newest_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, TREE)
+    steps = sorted(d for d in os.listdir(tmp_path))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_atomic_write_json_no_truncated_reader_view(tmp_path):
+    p = tmp_path / "manifest.json"
+    atomic_write_json(str(p), {"v": 1}, indent=2)
+    assert json.loads(p.read_text()) == {"v": 1}
+    atomic_write_json(str(p), {"v": 2})        # overwrite in place
+    assert json.loads(p.read_text()) == {"v": 2}
+    assert sorted(os.listdir(tmp_path)) == ["manifest.json"]   # no .tmp
+
+
+def test_heads_manifest_uses_atomic_writer(tmp_path):
+    """heads.json survives a stale .tmp from a prior kill: save()
+    replaces it atomically and load() reads a complete manifest."""
+    import jax.numpy as jnp
+    from repro.core.heads import HeadRegistry
+    reg = HeadRegistry()
+    reg.add("person", {"w": jnp.zeros(3780, np.float32),
+                       "b": jnp.float32(0)})
+    path = str(tmp_path)
+    stale = tmp_path / "heads.json.tmp"
+    stale.write_text("{trunca")
+    reg.save(path)
+    assert not stale.exists() or json.loads(stale.read_text())
+    loaded = HeadRegistry.load(path)
+    assert loaded.names == reg.names

@@ -1,0 +1,414 @@
+"""Resilience + chaos suite (DESIGN.md §14, CI lane `chaos-smoke`).
+
+Two families:
+
+  * UNIT (no device, no jit): the resilience primitives --
+    RetryPolicy backoff/jitter, CircuitBreaker with an injected fake
+    clock, RollingLatency percentiles, DegradationLadder hysteresis,
+    and the FaultInjector's seeded determinism.
+  * CHAOS (device, deterministic schedules): the supervised
+    DetectionService under injected worker kills, device loss, latency
+    spikes, deadlines, and malformed frames. The invariants pinned
+    here are liveness invariants: every submitted future resolves
+    (result, DeadlineExceeded, or traceback-carrying error), stop()
+    under chaos returns within its timeout, stats reconcile
+    (frame_answers == accepted submissions), and a forced degradation
+    episode reports `degraded_mode` and recovers to the full pipeline
+    with byte-identical detections to an unperturbed run.
+
+Frames are small (160x128, single scale, threshold -10) so the whole
+file runs on a handful of compiled programs.
+"""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.detector import DetectorConfig, FrameDetector
+from repro.serve.engine import (CircuitOpen, DetectionService,
+                                ServiceOverloaded, ServiceStopped)
+from repro.serve.faults import (DETERMINISTIC_TYPES, DeterministicFault,
+                                FaultInjector, FaultSpec, TransientFault,
+                                WorkerKilled, chaos_specs, malformed_frame)
+from repro.serve.resilience import (CircuitBreaker, DegradationLadder,
+                                    ResilienceConfig, RetryPolicy,
+                                    RollingLatency)
+
+RNG = np.random.default_rng(11)
+SVM = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+       "b": jnp.float32(0.0)}
+DET_CFG = DetectorConfig(score_threshold=-10.0, scales=(1.0,))
+
+
+def _frames(n, h=160, w=128, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+            for _ in range(n)]
+
+
+def _service(**kw):
+    kw.setdefault("detector", DET_CFG)
+    kw.setdefault("frame_batch", 1)
+    kw.setdefault("max_wait_ms", 1.0)
+    return DetectionService(SVM, **kw)
+
+
+# ================================================================ unit
+
+def test_retry_policy_caps_and_jitter_determinism():
+    p = RetryPolicy(backoff_base_ms=5.0, backoff_cap_ms=40.0, jitter=0.0)
+    assert [p.delay_ms(a) for a in (1, 2, 3, 4, 5)] == \
+        [5.0, 10.0, 20.0, 40.0, 40.0]
+    j = RetryPolicy(jitter=0.5, seed=7)
+    a, b = j.delay_ms(3), j.delay_ms(3)
+    assert a == b                              # seeded: replayable
+    assert j.delay_ms(3) <= 20.0               # jitter only subtracts
+    assert j.delay_ms(3) >= 10.0               # and at most `jitter` of it
+
+
+def test_circuit_breaker_state_machine_fake_clock():
+    t = {"now": 0.0}
+    br = CircuitBreaker(max_failures=3, reset_after_s=10.0,
+                        clock=lambda: t["now"])
+    assert br.state == "closed" and br.admit() and br.probe_due()
+    br.record_failure(); br.record_failure()
+    assert br.state == "closed" and br.admit()     # not consecutive enough
+    br.record_failure()
+    assert br.state == "open" and not br.admit() and not br.probe_due()
+    t["now"] = 9.9
+    assert not br.admit()
+    t["now"] = 10.0                                # cooled: probe due
+    assert br.admit() and br.probe_due()
+    assert br.state == "half_open"
+    br.record_failure()                            # probe failed: reopen
+    assert br.state == "open" and not br.admit()
+    t["now"] = 25.0
+    assert br.probe_due()
+    br.record_success()                            # probe served: close
+    assert br.state == "closed" and br.consecutive == 0
+
+
+def test_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(max_failures=2)
+    br.record_failure(); br.record_success(); br.record_failure()
+    assert br.state == "closed"                    # never 2 in a row
+
+
+def test_rolling_latency_window_and_percentiles():
+    rl = RollingLatency(window=4)
+    assert rl.percentile(99) == 0.0 and len(rl) == 0
+    for v in (100.0, 1.0, 2.0, 3.0, 4.0):          # 100 falls out
+        rl.add(v)
+    assert len(rl) == 4
+    assert rl.percentile(50) == 2.5
+    assert rl.snapshot()["p99"] <= 4.0
+
+
+def test_ladder_hysteresis_degrade_fast_recover_slow():
+    lad = DegradationLadder(("full", "cascade", "coarse"),
+                            degrade_p99_ms=100.0, recover_p99_ms=50.0,
+                            recover_dwell=2, min_samples=1)
+    assert lad.enabled and lad.rung == "full"
+    assert lad.observe(150.0, 0, 8) == "cascade"   # overload: drop a rung
+    assert lad.observe(150.0, 0, 8) == "coarse"    # still hot: next rung
+    assert lad.observe(150.0, 0, 8) == "coarse"    # floor holds
+    assert lad.observe(60.0, 0, 8) == "coarse"     # hysteresis band: hold
+    assert lad.observe(40.0, 0, 8) == "coarse"     # healthy 1/2
+    assert lad.observe(40.0, 0, 8) == "cascade"    # healthy 2/2: climb one
+    assert lad.observe(40.0, 0, 8) == "cascade"    # dwell restarts per rung
+    assert lad.observe(40.0, 0, 8) == "full"
+    assert lad.transitions == 4
+
+
+def test_ladder_depth_trigger_and_inert_default():
+    lad = DegradationLadder(("full", "reduced"), degrade_depth=10)
+    assert lad.observe(0.0, 10, 0) == "reduced"    # depth alone degrades
+    inert = DegradationLadder(("full", "reduced"))
+    assert not inert.enabled
+    assert inert.observe(1e9, 1_000_000, 64) == "full"
+
+
+def test_ladder_ignores_thin_latency_window():
+    lad = DegradationLadder(("full", "reduced"), degrade_p99_ms=10.0,
+                            min_samples=4)
+    # compile-time spike with 1 sample must not trigger the ladder
+    assert lad.observe(5000.0, 0, 1) == "full"
+    assert lad.observe(5000.0, 0, 4) == "reduced"
+
+
+def test_fault_injector_is_deterministic_and_capped():
+    mk = lambda: FaultInjector((
+        FaultSpec("exception", prob=0.3, max_fires=2),
+        FaultSpec("latency", at_batches=(1,), latency_ms=0.0)), seed=42)
+    a, b = mk(), mk()
+    for inj in (a, b):
+        for _ in range(50):
+            try:
+                inj.before_batch(1)
+            except TransientFault:
+                pass
+    assert a.fired == b.fired                      # seeded: replayable
+    assert sum(k == "exception" for _, k in a.fired) == 2   # max_fires
+    assert (1, "latency") in a.fired
+
+
+def test_fault_spec_rejects_unknown_kind_at_construction():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("melt_the_chip")
+
+
+def test_fault_taxonomy():
+    assert issubclass(WorkerKilled, BaseException)
+    assert not issubclass(WorkerKilled, Exception)  # sails past except
+    assert isinstance(DeterministicFault("x"), DETERMINISTIC_TYPES)
+    assert not isinstance(TransientFault("x"), DETERMINISTIC_TYPES)
+    assert issubclass(CircuitOpen, ServiceOverloaded)  # caller-compatible
+
+
+def test_resilience_config_json_roundtrip_via_pipeline():
+    from repro.api.config import PipelineConfig, presets
+    p = presets("resilient")
+    assert p.service.resilience.deadline_ms > 0
+    q = PipelineConfig.from_json(p.to_json())
+    assert q == p and isinstance(q.service.resilience.retry, RetryPolicy)
+
+
+# =============================================================== chaos
+
+@pytest.fixture(scope="module")
+def serial():
+    """Unperturbed per-frame reference detections (and program warmup
+    for everything after it)."""
+    det = FrameDetector(SVM, DET_CFG)
+    frames = _frames(10)
+    return frames, [det.detect_raw(f).to_list() for f in frames]
+
+
+def test_chaos_schedule_liveness_and_identical_results(serial):
+    """The acceptance gate: under the standard worker-kill/device-loss/
+    latency schedule every future resolves, results are byte-identical
+    to the unperturbed run, and stop() returns."""
+    frames, ref = serial
+    inj = FaultInjector(chaos_specs(), seed=0)
+    svc = _service(faults=inj).start()
+    res = svc.detect_frames(frames, timeout=120)
+    assert [r["detections"] for r in res] == ref
+    assert all("error" not in r for r in res)
+    assert {k for _, k in inj.fired} == \
+        {"kill_worker", "device_loss", "latency"}
+    assert svc.stats["restarts"] >= 2 and svc.stats["retries"] >= 2
+    assert svc.stats["frame_answers"] == len(frames)
+    t0 = time.monotonic()
+    svc.stop()
+    assert time.monotonic() - t0 < 15
+
+
+def test_deadline_shed_before_compute(serial):
+    """An expired request is answered with the DeadlineExceeded payload
+    BEFORE compute: with the worker parked, every queued request's
+    budget burns down and none of them reach the detector."""
+    frames, _ = serial
+    svc = _service()
+    futs = [svc.submit_frame(f, deadline_ms=1.0) for f in frames[:4]]
+    time.sleep(0.05)                   # budgets expire while queued
+    svc.start()
+    for f in futs:
+        r = f.get(timeout=30)
+        assert r.get("deadline_exceeded") is True
+        assert "DeadlineExceeded" in r["error"]
+    assert svc.stats["deadline_shed"] == 4
+    assert svc.stats["frames"] == 0            # nothing was computed
+    # an un-deadlined request right after is served normally
+    ok = svc.submit_frame(frames[0]).get(timeout=60)
+    assert "error" not in ok
+    svc.stop()
+
+
+def test_deadline_default_from_config(serial):
+    frames, _ = serial
+    svc = _service(resilience=ResilienceConfig(deadline_ms=1.0))
+    fut = svc.submit_frame(frames[0])          # inherits the 1 ms budget
+    time.sleep(0.05)
+    svc.start()
+    assert fut.get(timeout=30).get("deadline_exceeded") is True
+    svc.stop()
+
+
+def test_breaker_trips_to_fail_fast_then_recovers(serial):
+    """N consecutive worker deaths open the breaker: submission raises
+    CircuitOpen, queued work is drained (not parked), and after the
+    cooldown a probe worker serves again and closes it."""
+    frames, ref = serial
+    inj = FaultInjector((FaultSpec("kill_worker", at_batches=(0, 1),
+                                   max_fires=2),), seed=0)
+    svc = _service(faults=inj,
+                   resilience=ResilienceConfig(
+                       breaker_failures=2, breaker_reset_s=0.2,
+                       retry=RetryPolicy(max_attempts=5,
+                                         backoff_base_ms=1.0,
+                                         backoff_cap_ms=2.0))).start()
+    fut = svc.submit_frame(frames[0])
+    deadline = time.monotonic() + 30
+    while svc.stats["breaker"]["state"] != "open":
+        assert time.monotonic() < deadline, "breaker never opened"
+        time.sleep(0.005)
+    # open: fail-fast admission ...
+    with pytest.raises(CircuitOpen):
+        while True:                  # may race the cooldown; bounded
+            svc.submit_frame(frames[0])
+            assert time.monotonic() < deadline
+    # ... and the queued request was answered, not parked
+    r = fut.get(timeout=30)
+    assert isinstance(r, dict)
+    # cooldown elapses -> half-open probe serves -> closed
+    time.sleep(0.25)
+    ok = svc.detect_frames([frames[0]], timeout=60)[0]
+    assert ok["detections"] == ref[0]
+    assert svc.stats["breaker"]["state"] == "closed"
+    assert svc.stats["restarts"] >= 2
+    svc.stop()
+
+
+def test_degradation_episode_reports_and_recovers(serial):
+    """Forced overload degrades to the reduced rung (surfaced per
+    response as degraded_mode), and after the spikes stop the ladder
+    climbs back to full with byte-identical detections."""
+    frames, ref = serial
+    inj = FaultInjector((FaultSpec("latency", at_batches=(2, 3, 4, 5),
+                                   latency_ms=80.0),), seed=0)
+    svc = _service(
+        faults=inj,
+        resilience=ResilienceConfig(degrade_p99_ms=50.0,
+                                    recover_p99_ms=20.0,
+                                    recover_dwell=2, latency_window=4))
+    svc.start()
+    rungs = []
+    for f in frames:
+        r = svc.detect_frames([f], timeout=60)[0]
+        assert "degraded_mode" in r
+        rungs.append(r["degraded_mode"])
+    assert "reduced" in rungs, f"never degraded: {rungs}"
+    assert svc.stats["frames_degraded"] >= 1
+    assert svc.stats["ladder"]["transitions"] >= 1
+    # spikes over: ladder climbs back and full-pipeline results are
+    # byte-identical to the unperturbed reference
+    deadline = time.monotonic() + 60
+    while svc.stats["degraded_mode"] != "full":
+        assert time.monotonic() < deadline, \
+            f"never recovered: {svc.stats['ladder']}"
+        svc.detect_frames([frames[0]], timeout=60)
+    res = svc.detect_frames(frames, timeout=120)
+    assert [r["degraded_mode"] for r in res] == ["full"] * len(frames)
+    assert [r["detections"] for r in res] == ref
+    assert svc.stats["ladder"]["transitions"] >= 2   # down AND back up
+    svc.stop()
+
+
+def test_malformed_frames_do_not_poison_batchmates(serial):
+    """Garbage frames riding a batch with good frames get error (or
+    empty) payloads; the good frames' results are unaffected."""
+    frames, ref = serial
+    rng = np.random.default_rng(3)
+    bad = [malformed_frame(rng) for _ in range(4)]
+    svc = _service(frame_batch=2).start()
+    mixed = [frames[0], bad[0], frames[1], bad[1],
+             bad[2], frames[2], bad[3], frames[3]]
+    res = svc.detect_frames(mixed, timeout=120)
+    assert len(res) == len(mixed)              # every future resolved
+    assert [res[i]["detections"] for i in (0, 2, 5, 7)] == ref[:4]
+    assert svc.stats["frame_answers"] == len(mixed)
+    assert svc.stats["restarts"] == 0          # contained, not a death
+    svc.stop()
+    assert svc._pending_frames == 0
+
+
+def test_stop_under_chaos_never_hangs_and_stats_reconcile(serial):
+    """stop() racing live chaos traffic: returns within its timeout,
+    every accepted future resolves, and the books balance."""
+    frames, _ = serial
+    inj = FaultInjector((
+        FaultSpec("kill_worker", prob=0.2, max_fires=3),
+        FaultSpec("latency", prob=0.5, latency_ms=20.0)), seed=5)
+    svc = _service(faults=inj).start()
+    futs, lock = [], threading.Lock()
+
+    def client(seed):
+        for f in _frames(6, seed=seed):
+            try:
+                fut = svc.submit_frame(f, deadline_ms=500.0)
+            except (ServiceOverloaded, ServiceStopped):
+                continue
+            with lock:
+                futs.append(fut)
+
+    threads = [threading.Thread(target=client, args=(s,))
+               for s in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    svc.stop()
+    assert time.monotonic() - t0 < 15
+    for t in threads:
+        t.join(timeout=10)
+        assert not t.is_alive()
+    for fut in futs:
+        assert isinstance(fut.get(timeout=5), dict)   # resolved, somehow
+    assert svc._pending_frames == 0
+    assert svc.stats["frame_answers"] == len(futs)
+
+
+def test_submit_after_stop_raises_service_stopped(serial):
+    frames, _ = serial
+    svc = _service().start()
+    svc.stop()
+    with pytest.raises(ServiceStopped):
+        svc.submit_frame(frames[0])
+    with pytest.raises(ServiceStopped):
+        svc.submit(np.zeros((130, 66, 3), np.uint8))
+    # detect_frames soft-fails (ServiceStopped is not ServiceOverloaded:
+    # callers must see the hard error)
+    with pytest.raises(ServiceStopped):
+        svc.detect_frames(frames[:1])
+
+
+def test_future_timeout_leaves_no_orphan(serial):
+    """Satellite: a caller abandoning f.get(timeout=...) must not leave
+    an orphaned backlog entry that skews stats or blocks shutdown --
+    the request is still served, its pending slot released, and the
+    payload parks harmlessly in the future."""
+    frames, _ = serial
+    svc = _service()
+    fut = svc.submit_frame(frames[0])     # worker not started yet ...
+    with pytest.raises(Exception):        # queue.Empty
+        fut.get(timeout=0.01)             # ... so the caller times out
+    svc.start()                           # service still serves it
+    deadline = time.monotonic() + 60
+    while svc.stats["frame_answers"] < 1:
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    assert svc._pending_frames == 0       # slot released, stats sane
+    assert svc.stats["frames"] == 1
+    assert fut.get(timeout=5)["detections"] is not None
+    t0 = time.monotonic()
+    svc.stop()
+    assert time.monotonic() - t0 < 15
+
+
+def test_session_serve_wires_resilience_and_cascade_rungs():
+    """api wiring: config.service.resilience reaches the engine and a
+    cascade-enabled config backs the ladder with cascade rungs."""
+    from repro.api.config import presets
+    p = presets("resilient")
+    sc = p.service.resilience
+    assert sc.deadline_ms == 500.0 and sc.degrade_p99_ms == 120.0
+    # engine-side rung selection (no training needed): a cascade handle
+    # opens the cascade/coarse rungs, no handle means reduced-pyramid
+    from repro.core.cascade import CascadeDetector
+    svc = _service()
+    assert svc._ladder.rungs == ("full", "reduced")
+    assert svc._reduced.cfg.scales == (1.0,)
+    svc2 = _service(cascade=object.__new__(CascadeDetector))
+    assert svc2._ladder.rungs == ("full", "cascade", "coarse")

@@ -89,11 +89,13 @@ def test_service_stop_with_backlog_answers_errors():
     assert svc._pending_frames == 0
 
 
-def test_service_worker_exception_drains_and_surfaces_traceback():
-    """Regression: an exception escaping the per-request containment
-    killed the worker thread silently, hanging every in-flight and
-    future request. Now the backlog gets error payloads carrying the
-    traceback, `worker_error` keeps it, and the worker keeps serving."""
+def test_service_worker_exception_restarts_and_serves():
+    """Regression (PR 5): an exception escaping the per-request
+    containment killed the worker thread silently, hanging every
+    in-flight and future request. Since the supervisor (PR 9) a
+    TRANSIENT escape is absorbed entirely: the worker restarts,
+    `worker_error` keeps the traceback, and the request that was in
+    the room when it happened is retried and served normally."""
     svc = DetectionService(SVM, detector=DET_CFG, max_wait_ms=1.0)
     original = svc._serve_frame_batch
     calls = {"n": 0}
@@ -108,12 +110,39 @@ def test_service_worker_exception_drains_and_surfaces_traceback():
     frame = _frames(1)[0]
     fut = svc.submit_frame(frame)       # queued before the worker runs:
     svc.start()                         # its first serve attempt raises
-    res = fut.get(timeout=15)           # must NOT hang
-    assert "error" in res and "injected-worker-bug" in res["error"]
+    res = fut.get(timeout=60)           # must NOT hang
+    assert "error" not in res           # retried after the restart
+    assert res["detections"]
     assert "injected-worker-bug" in (svc.worker_error or "")
-    # the worker survived: the next request is served normally
+    assert svc.stats["restarts"] >= 1
+    assert svc.stats["worker_failures"] >= 1
+    # the respawned worker keeps serving
     ok = svc.submit_frame(frame).get(timeout=30)
     assert "error" not in ok
+    svc.stop()
+
+
+def test_service_worker_deterministic_exception_fails_fast():
+    """A deterministic failure class (ValueError et al.,
+    faults.DETERMINISTIC_TYPES) must NOT be retried: the in-flight
+    request is answered immediately with the original traceback."""
+    svc = DetectionService(SVM, detector=DET_CFG, max_wait_ms=1.0)
+
+    def boom():
+        # simulate the failure arriving mid-batch, with the request
+        # already in the worker's hands
+        req = svc._next_frame_req()
+        if req is not None:
+            svc._inflight = [req]
+            raise ValueError("deterministic-worker-bug")
+        return False
+
+    svc._serve_frame_batch = boom
+    fut = svc.submit_frame(_frames(1)[0])
+    svc.start()
+    res = fut.get(timeout=15)
+    assert "error" in res and "deterministic-worker-bug" in res["error"]
+    assert "deterministic failure" in res["error"]
     svc.stop()
 
 
