@@ -18,7 +18,16 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
 
 
 def update_bench(**updates) -> None:
-    """Merge-update BENCH_detect.json, preserving other sections."""
+    """Merge-update BENCH_detect.json, preserving other sections. Every
+    write also refreshes the top-level "platform" stamp
+    (repro.platform.describe()) so the recorded numbers are always
+    attributable to the environment that measured them; best-effort --
+    a jax-free caller still gets its section written."""
     data = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
     data.update(updates)
+    try:
+        from repro import platform
+        data["platform"] = platform.describe()
+    except Exception:
+        pass
     BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")

@@ -1,0 +1,261 @@
+"""SLO harness: the serving contract as a CI gate (DESIGN.md §15).
+
+The paper's pitch is a latency CONTRACT -- 0.757 ms/frame at 50 MHz,
+not a mean it sometimes hits -- and this repro's serving story should
+be held to the same standard. `run_slo` replays seeded golden clips
+(data/synth_pedestrian.make_clip: constant-velocity pedestrians over
+static clutter) through the real DetectionService and records
+
+    p50/p99 ms/frame   client-observed sojourn latency (submit ->
+                       future resolution through the microbatcher),
+                       best-of-rounds so one noisy CI neighbour does
+                       not fail the lane
+    miss rate          ground-truth pedestrians with no detection
+                       within the +-32 px corner criterion
+                       (launch/detect.py's recall rule), over every
+                       clip frame -- the accuracy half of the SLO
+
+into BENCH_detect.json under "slo". `--check` re-measures and gates
+BOTH against the committed baseline: p99 host-normalized by the
+calibration mini-pipeline (bench_timing._calibration_fn, recorded next
+to the baseline -- a slower CI runner scales the limit instead of
+failing it), miss rate with a small absolute slack (accuracy does not
+host-normalize). A missing baseline is a SKIP, not a failure, same as
+bench_timing --check.
+
+`--metrics PATH` streams the service's structured events (obs/metrics)
+to a JSONL artifact the CI lane uploads -- every gated number ships
+with the event stream that produced it.
+
+Usage:
+    python benchmarks/bench_slo.py [--fast]            # record baseline
+    python benchmarks/bench_slo.py --check [--fast]    # CI gate
+    python benchmarks/bench_slo.py --check --metrics slo_metrics.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro import platform  # noqa: E402  (applies REPRO_* at import)
+
+platform.hermetic_autotune()   # probe live, don't inherit a stale cache
+
+import numpy as np             # noqa: E402
+
+try:                                   # package-style
+    from benchmarks.bench_io import update_bench as _update_bench
+    from benchmarks.bench_timing import _calibration_fn
+except ImportError:                    # direct: python benchmarks/bench_slo.py
+    from bench_io import update_bench as _update_bench
+    from bench_timing import _calibration_fn
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_detect.json"
+
+#: corner-match radius of the recall criterion (launch/detect.py)
+MATCH_PX = 32
+
+#: --check tolerances: p99 is wall-time on shared CI runners even after
+#: host normalization (the service path adds queueing the calibration
+#: pipeline cannot see), so the latency gate is generous; the miss-rate
+#: slack absorbs SVM training noise on the fast split
+P99_TOLERANCE = 0.50
+MISS_RATE_SLACK = 0.05
+
+
+def _golden_clips(fast: bool):
+    """Seeded clips the SLO replays -- two traffic shapes: a busy
+    240x320 street and a sparser 256x384 one. REPRO_SEED shifts the
+    whole suite for replay experiments (default 0 = the committed
+    baseline's clips)."""
+    from repro.data.synth_pedestrian import ClipConfig, make_clip
+    seed = platform.default_seed()
+    rng = np.random.default_rng(seed)
+    n = 6 if fast else 12
+    clips = [make_clip(rng, ClipConfig(n_frames=n, h=240, w=320,
+                                       n_people=2)),
+             make_clip(rng, ClipConfig(n_frames=n, h=256, w=384,
+                                       n_people=1, n_distractors=5))]
+    return clips, seed
+
+
+def _train_session(fast: bool):
+    from repro.api import DetectionSession, PipelineConfig
+    from repro.core.detector import DetectorConfig
+    from repro.core.svm import SVMTrainConfig
+    cfg = PipelineConfig(
+        detector=DetectorConfig(score_threshold=0.5),
+        train=SVMTrainConfig(steps=1200 if fast else 2500,
+                             neg_weight=6.0))
+    rng = np.random.default_rng(platform.default_seed())
+    n_pos, n_neg = (500, 350) if fast else (1500, 1000)
+    return DetectionSession.train(cfg, n_pos=n_pos, n_neg=n_neg, rng=rng)
+
+
+def _matched(dets, box) -> bool:
+    y0, x0 = box[0], box[1]
+    return any(abs(d["box"][0] - y0) < MATCH_PX
+               and abs(d["box"][1] - x0) < MATCH_PX for d in dets)
+
+
+def _measure_round(service, clips):
+    """One replay of every clip through the service, frame by frame
+    (client-observed sojourn: submit -> result). Returns (latencies_ms,
+    truth_total, truth_missed)."""
+    lat, total, missed = [], 0, 0
+    for frames, truths in clips:
+        for t in range(len(frames)):
+            t0 = time.perf_counter()
+            r = service.detect_frames([np.asarray(frames[t])],
+                                      timeout=120)[0]
+            lat.append((time.perf_counter() - t0) * 1e3)
+            dets = r.get("detections", [])
+            for person in truths[t]:
+                total += 1
+                missed += not _matched(dets, person["box"])
+    return lat, total, missed
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def run_slo(fast: bool = False, metrics_path: str = "",
+            write: bool = True) -> dict:
+    """Measure the serving SLO numbers; write BENCH "slo" when asked."""
+    from repro.obs import MetricsConfig
+
+    clips, seed = _golden_clips(fast)
+    n_frames = sum(len(f) for f, _ in clips)
+    print(f"# SLO replay -- {len(clips)} golden clips, {n_frames} "
+          f"frames, seed {seed}")
+    session = _train_session(fast)
+
+    opts = {}
+    if metrics_path:
+        opts["metrics"] = MetricsConfig(jsonl_path=metrics_path, ring=64)
+    service = session.serve(frame_batch=1, **opts).start()
+    try:
+        # round 0 pays every per-bucket compile; it never scores
+        _measure_round(service, clips)
+        rounds = 2 if fast else 3
+        best = None
+        total = missed = 0
+        for i in range(rounds):
+            lat, total, missed = _measure_round(service, clips)
+            row = {"p50_ms": _pct(lat, 50), "p99_ms": _pct(lat, 99),
+                   "mean_ms": float(np.mean(lat))}
+            print(f"slo/round{i},p50 {row['p50_ms']:.2f} ms,"
+                  f"p99 {row['p99_ms']:.2f} ms")
+            if best is None or row["p99_ms"] < best["p99_ms"]:
+                best = row
+        svc_stats = {"frames": service.stats["frames"],
+                     "batches": service.stats["frame_batches"],
+                     "answers": service.stats["frame_answers"]}
+    finally:
+        service.stop()
+
+    miss_rate = missed / max(1, total)
+    calib = _calibration_fn()
+    calib()                                       # compile
+    best_c = np.inf
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(5):
+            calib()
+        best_c = min(best_c, (time.perf_counter() - t0) / 5)
+    calib_ms = best_c * 1e3
+
+    row = {
+        "p50_ms": round(best["p50_ms"], 3),
+        "p99_ms": round(best["p99_ms"], 3),
+        "mean_ms": round(best["mean_ms"], 3),
+        "miss_rate": round(miss_rate, 4),
+        "truth_boxes": total,
+        "missed": missed,
+        "frames_per_round": n_frames,
+        "rounds": rounds,
+        "fast": fast,
+        "seed": seed,
+        "calibration_ms": round(calib_ms, 3),
+        "platform": platform.describe(),
+    }
+    print(f"slo/p50_ms,{row['p50_ms']:.2f}")
+    print(f"slo/p99_ms,{row['p99_ms']:.2f},best of {rounds} rounds")
+    print(f"slo/miss_rate,{miss_rate:.4f},{missed}/{total} truth boxes")
+    print(f"slo/calibration_ms,{calib_ms:.3f}")
+    if metrics_path:
+        print(f"slo/metrics,{metrics_path}")
+    if write:
+        _update_bench(slo=row)
+        print(f"slo/WROTE,{BENCH_JSON}")
+    row["service"] = svc_stats
+    return row
+
+
+def run_check(fast: bool = True, metrics_path: str = "") -> int:
+    """Gate p99 ms/frame AND miss rate against the committed "slo"
+    baseline. Exit 1 on breach; a missing baseline SKIPs (exit 0) so a
+    branch that resets BENCH_detect.json does not turn CI red without
+    an actual regression. Never writes the json."""
+    if not BENCH_JSON.exists():
+        print("slo-check/SKIP,no BENCH_detect.json baseline")
+        return 0
+    base = json.loads(BENCH_JSON.read_text()).get("slo")
+    if not base:
+        print("slo-check/SKIP,no slo section in BENCH_detect.json "
+              "(run benchmarks/bench_slo.py to record one)")
+        return 0
+
+    now = run_slo(fast=fast, metrics_path=metrics_path, write=False)
+
+    calib_base = base.get("calibration_ms")
+    scale = (now["calibration_ms"] / calib_base) if calib_base else 1.0
+    p99_limit = base["p99_ms"] * scale * (1.0 + P99_TOLERANCE)
+    miss_limit = base["miss_rate"] + MISS_RATE_SLACK
+
+    p99_ok = now["p99_ms"] <= p99_limit
+    miss_ok = now["miss_rate"] <= miss_limit
+    print(f"slo-check/baseline,p99 {base['p99_ms']:.2f} ms,"
+          f"miss {base['miss_rate']:.4f},calib "
+          f"{calib_base and f'{calib_base:.3f}'} ms")
+    print(f"slo-check/host_scale,{scale:.3f},"
+          f"calib now {now['calibration_ms']:.3f} ms")
+    print(f"slo-check/p99,{now['p99_ms']:.2f},limit {p99_limit:.2f} "
+          f"(+{P99_TOLERANCE:.0%} host-normalized),"
+          f"{'PASS' if p99_ok else 'FAIL'}")
+    print(f"slo-check/miss_rate,{now['miss_rate']:.4f},"
+          f"limit {miss_limit:.4f} (+{MISS_RATE_SLACK} abs),"
+          f"{'PASS' if miss_ok else 'FAIL'}")
+    verdict = "PASS" if (p99_ok and miss_ok) else "FAIL"
+    print(f"slo-check/{verdict},p99 + miss-rate SLO")
+    return 0 if verdict == "PASS" else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller train split, fewer clips/rounds "
+                         "(the CI lane's mode)")
+    ap.add_argument("--check", action="store_true",
+                    help="gate p99 + miss-rate vs the committed BENCH "
+                         "slo baseline instead of recording one")
+    ap.add_argument("--metrics", metavar="PATH", default="",
+                    help="stream service events to this JSONL file "
+                         "(uploaded as a CI artifact)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return run_check(fast=args.fast, metrics_path=args.metrics)
+    run_slo(fast=args.fast, metrics_path=args.metrics)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

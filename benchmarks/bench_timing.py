@@ -26,17 +26,20 @@ import pathlib
 import sys
 import time
 
-if ("--sharded" in sys.argv or "--uhd" in sys.argv) \
-        and "xla_force_host_platform_device_count" \
-        not in os.environ.get("XLA_FLAGS", ""):
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro import platform  # noqa: E402  (applies REPRO_* at import)
+
+if "--sharded" in sys.argv or "--uhd" in sys.argv:
     # the sharded/uhd sections need multiple devices; forcing host
-    # devices must happen BEFORE jax first initializes (the same trick
-    # launch/dryrun.py uses). An operator-provided XLA_FLAGS wins.
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=8")
+    # devices must happen BEFORE jax first initializes (the same seam
+    # launch/dryrun.py uses). An operator-provided count in XLA_FLAGS
+    # wins -- force_host_devices merges, never clobbers.
+    platform.force_host_devices(8)
 # probe the batch schedules live: a stale disk-cached autotune decision
 # would make the recorded probe_ms tables lies about THIS run
-os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "")
+platform.hermetic_autotune()
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,9 @@
 7. resilient serving (DESIGN.md §14): injected latency spikes push the
    service's rolling p99 over the degradation line, responses report
    `degraded_mode` per frame, and the hysteresis ladder climbs back to
-   the full pipeline once the overload clears.
+   the full pipeline once the overload clears -- while the whole
+   episode streams off-process as structured JSONL events
+   (`repro.obs.metrics`, DESIGN.md §15) you can `tail -f` live.
 
 The same session serves every other path too:
 
@@ -154,8 +156,18 @@ def main():
     reduced_detector(warm).detect_raw(small)
     inj = FaultInjector((FaultSpec("latency", at_batches=(2, 3, 4, 5),
                                    latency_ms=120.0),), seed=0)
+    # every service event (batches, rung transitions, sheds, restarts)
+    # streams to a JSONL file as it happens -- telemetry that survives
+    # the process (DESIGN.md §15)
+    import os
+    import tempfile
+    from repro.obs import JsonlSink, MetricsConfig
+    mpath = os.path.join(tempfile.mkdtemp(prefix="repro-quickstart-"),
+                         "metrics.jsonl")
+    print(f"      events -> {mpath}  (live: tail -f {mpath})")
     svc = session.serve(
         frame_detector=warm, frame_batch=1, faults=inj,
+        metrics=MetricsConfig(jsonl_path=mpath, ring=64),
         resilience=ResilienceConfig(degrade_p99_ms=80.0,
                                     recover_p99_ms=30.0,
                                     recover_dwell=2,
@@ -174,6 +186,16 @@ def main():
           f"degraded={s['frames_degraded']} frames, "
           f"ladder transitions={s['ladder']['transitions']}, "
           f"final rung={s['degraded_mode']}")
+    events = JsonlSink.read(mpath)
+    kinds = {}
+    for e in events:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    print(f"      {len(events)} events exported: "
+          + " ".join(f"{k}x{n}" for k, n in sorted(kinds.items())))
+    for t in (e for e in events if e["kind"] == "rung_transition"):
+        print(f"      t={t['t_ms']:7.1f}ms  {t['rung_from']} -> "
+              f"{t['rung_to']}  ({t['direction']}, p99="
+              f"{t['p99_ms']:.0f}ms, queue={t['queue_depth']})")
 
 
 if __name__ == "__main__":

@@ -68,6 +68,7 @@ from repro.core.detector import DetectorConfig
 from repro.core.hog import HOGConfig, PAPER_HOG
 from repro.core.svm import SVMTrainConfig
 from repro.core.video import TrackerConfig
+from repro.obs.metrics import MetricsConfig
 from repro.serve.resilience import ResilienceConfig, RetryPolicy
 
 
@@ -83,6 +84,9 @@ class ServiceConfig:
     # the defaults are inert -- supervision and transient retry are
     # always on, deadlines and the ladder only when configured
     resilience: ResilienceConfig = ResilienceConfig()
+    # structured-event export (obs/metrics.py, DESIGN.md §15); the
+    # default is disabled -- a jsonl_path or ring size turns it on
+    metrics: MetricsConfig = MetricsConfig()
 
 
 @dataclasses.dataclass(frozen=True)

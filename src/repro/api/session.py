@@ -280,7 +280,8 @@ class DetectionSession:
                     detector=self.config.detector,
                     frame_batch=sc.frame_batch,
                     max_pending_frames=sc.max_pending_frames,
-                    resilience=sc.resilience)
+                    resilience=sc.resilience,
+                    metrics=sc.metrics)
         # an explicit detector override builds its own FrameDetector;
         # otherwise the service shares this session's handle (and with
         # it every already-compiled program). frame_detector rides in
@@ -321,7 +322,12 @@ class DetectionSession:
         caches plus this session's call and warmup bookkeeping. The
         "autotune" section reports how the batch-schedule decisions were
         sourced -- in-memory hit, disk-cache restore, or a live probe --
-        plus the resolved cache path (core/autotune_cache.py)."""
+        plus the resolved cache path (core/autotune_cache.py). The
+        "platform" block (repro.platform.describe()) records the
+        environment -- backend, device count, x64, XLA flags -- so a
+        checked-in stats dump is attributable to the host that made it.
+        """
+        from repro import platform
         from repro.core import autotune_cache
         fi = _frame_program.cache_info()
         si = _single_fn.cache_info()
@@ -359,6 +365,7 @@ class DetectionSession:
                      "frame_parallel": self.config.detector.frame_parallel,
                      "tile_devices": tiles},
             "autotune": autotune_cache.stats(),
+            "platform": platform.describe(),
             "warmed": sorted(self._warm),
             "calls": dict(self._stats),
         }

@@ -29,6 +29,8 @@ import platform
 import tempfile
 from typing import Optional
 
+from repro import platform as repro_platform
+
 _STATS = {"memory_hits": 0, "disk_hits": 0, "probes": 0, "writes": 0,
           "load_errors": 0}
 _CACHE: Optional[dict] = None       # parsed file content, memoized
@@ -37,12 +39,9 @@ _CACHE_PATH: Optional[str] = None   # path _CACHE was loaded from
 
 def cache_path() -> Optional[str]:
     """Resolved cache file path, or None when persistence is disabled
-    (REPRO_AUTOTUNE_CACHE set to an empty string)."""
-    p = os.environ.get("REPRO_AUTOTUNE_CACHE")
-    if p is not None:
-        return os.path.expanduser(p) if p else None
-    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "autotune.json")
+    (REPRO_AUTOTUNE_CACHE set to an empty string). Resolution lives in
+    repro.platform -- the one owner of env interpretation."""
+    return repro_platform.autotune_cache_path()
 
 
 def host_fingerprint() -> str:

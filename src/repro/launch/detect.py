@@ -14,6 +14,8 @@ Usage: PYTHONPATH=src python -m repro.launch.detect
 """
 from __future__ import annotations
 
+from repro import platform  # applies REPRO_* before jax initializes
+
 import argparse
 import sys
 import time
@@ -64,8 +66,9 @@ def main(argv=None):
     n_pos, n_neg = (500, 350) if args.fast else (1500, 1000)
 
     # one rng stream for training windows AND evaluation scenes (the
-    # seed CLI's contract: scenes are drawn from the post-train state)
-    rng = np.random.default_rng(0)
+    # seed CLI's contract: scenes are drawn from the post-train state);
+    # REPRO_SEED overrides for replaying a lane, default 0 as before
+    rng = np.random.default_rng(platform.default_seed())
     session = None
     if args.load:
         try:
@@ -111,6 +114,9 @@ def main(argv=None):
     stats = session.cache_stats()
     print(f"compiled programs: {stats['frame_programs']['size']} "
           f"(hits {stats['frame_programs']['hits']})")
+    plat = stats["platform"]
+    print(f"platform: {plat['backend']} x{plat['device_count']} "
+          f"x64={plat['x64']} jax={plat['jax_version']}")
     return 0
 
 

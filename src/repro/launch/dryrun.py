@@ -1,9 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro import platform
+platform.force_host_devices(512)
 # The two lines above MUST run before any other import (jax locks the
-# device count at first init). Only the dry-run sees 512 host devices.
+# device count at first init). Only the dry-run sees 512 host devices;
+# force_host_devices MERGES into XLA_FLAGS, so operator-set flags (and
+# an operator-set device count) survive instead of being clobbered.
 
 import argparse          # noqa: E402
+import os                # noqa: E402
 import json              # noqa: E402
 import time              # noqa: E402
 import traceback         # noqa: E402

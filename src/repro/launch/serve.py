@@ -18,8 +18,12 @@ and prints per-frame latency, saturation, and service stats.
 (serve/faults.py chaos_specs: worker kill, device loss, latency
 spikes) through the supervised engine and exits nonzero unless every
 submitted frame resolved -- the CLI face of the chaos-smoke CI lane.
+`--detect --metrics PATH` streams the service's structured telemetry
+(DESIGN.md §15 event schema) to a JSONL file you can `tail -f`.
 """
 from __future__ import annotations
+
+from repro import platform  # noqa: F401  (applies REPRO_* before jax init)
 
 import argparse
 import sys
@@ -58,6 +62,11 @@ def _detect_smoke(args) -> int:
         opts["faults"] = FaultInjector(chaos_specs(), seed=0)
         print("chaos: injecting worker-kill, device-loss, and latency "
               "faults (serve/faults.py chaos_specs)")
+    if args.metrics:
+        from repro.obs import MetricsConfig
+        opts["metrics"] = MetricsConfig(jsonl_path=args.metrics, ring=64)
+        print(f"metrics: streaming JSONL events to {args.metrics} "
+              f"(tail -f it in another terminal)")
     service = session.serve(**opts).start()
     rng = np.random.default_rng(0)
     frames = [make_scene(rng, 240, 320, n_people=2)[0]
@@ -86,7 +95,18 @@ def _detect_smoke(args) -> int:
           f"shed={s['deadline_shed']} retries={s['retries']} "
           f"restarts={s['restarts']} "
           f"breaker={s['breaker']['state']} rung={s['degraded_mode']}")
+    plat = s["platform"]
+    print(f"platform      {plat['backend']} x{plat['device_count']} "
+          f"x64={plat['x64']} jax={plat['jax_version']}")
     service.stop()
+    if args.metrics:
+        from repro.obs import JsonlSink
+        events = JsonlSink.read(args.metrics)
+        by_kind = {}
+        for e in events:
+            by_kind[e["kind"]] = by_kind.get(e["kind"], 0) + 1
+        kinds = " ".join(f"{k}={n}" for k, n in sorted(by_kind.items()))
+        print(f"metrics       {len(events)} events: {kinds}")
     if args.chaos:
         # liveness gate: every future resolved, chaos or not
         resolved = s["frame_answers"] == len(frames)
@@ -118,6 +138,9 @@ def main(argv=None):
     ap.add_argument("--load", metavar="DIR", default=None,
                     help="--detect: restore SVM params from a "
                          "checkpoint dir instead of training")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="--detect: stream service telemetry as JSONL "
+                         "events to PATH (DESIGN.md §15 schema)")
     args = ap.parse_args(argv)
 
     if args.detect:

@@ -1,0 +1,9 @@
+"""Observability: off-process metrics export (DESIGN.md §15)."""
+from repro.obs.metrics import (CallbackSink, Emitter, JsonlSink,
+                               MetricsConfig, MetricsSink, NullSink,
+                               RingSink, TeeSink, make_sink)
+
+__all__ = [
+    "CallbackSink", "Emitter", "JsonlSink", "MetricsConfig",
+    "MetricsSink", "NullSink", "RingSink", "TeeSink", "make_sink",
+]

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import platform
 from repro.core.cascade import reduced_detector
 from repro.core.detector import DetectorConfig, FrameDetector
 from repro.core.hog import HOGConfig, PAPER_HOG
@@ -82,6 +83,7 @@ from repro.core.pipeline import classify_windows
 from repro.core.svm import SVMParams
 from repro.models.configs import ModelConfig
 from repro.models.model import decode_step, prefill
+from repro.obs.metrics import Emitter, MetricsConfig, make_sink
 from repro.serve.faults import DETERMINISTIC_TYPES, FaultInjector
 from repro.serve.resilience import (CircuitBreaker, DegradationLadder,
                                     ResilienceConfig, RollingLatency)
@@ -141,7 +143,8 @@ class DetectionService:
                  frame_detector: Optional[FrameDetector] = None,
                  resilience: Optional[ResilienceConfig] = None,
                  faults: Optional[FaultInjector] = None,
-                 cascade: Optional[Any] = None):
+                 cascade: Optional[Any] = None,
+                 metrics: Optional[MetricsConfig] = None):
         self.svm = svm
         self.batch = batch_size
         self.cfg = cfg
@@ -206,6 +209,15 @@ class DetectionService:
         self._inflight: List[FrameRequest] = []
         self._inflight_windows: List[DetectionRequest] = []
 
+        # ------------------------------------------ metrics export (§15)
+        # structured events out of process (obs/metrics.py): the
+        # supervisor loop and the batch path emit through one Emitter
+        # (rank-0 guarded, never raising into the serve loop); disabled
+        # config -> NullSink -> every emit is a cheap no-op
+        self.metrics = metrics if metrics is not None else MetricsConfig()
+        sink, self._metrics_ring = make_sink(self.metrics)
+        self._emit = Emitter(sink, rank0_only=self.metrics.rank0_only)
+
         self.worker_error: Optional[str] = None
         self._thread: Optional[threading.Thread] = None
         self._supervisor = threading.Thread(
@@ -233,10 +245,30 @@ class DetectionService:
                       "latency_ms": self._latency.snapshot(),
                       "breaker": self._breaker.snapshot(),
                       "degraded_mode": self._ladder.rung,
-                      "ladder": self._ladder.snapshot()}
+                      "ladder": self._ladder.snapshot(),
+                      # -------------------- environment + export (§15)
+                      "platform": platform.describe(),
+                      "metrics": {"enabled": self._emit.active,
+                                  "emitted": 0, "dropped": 0}}
+
+    def _metrics_stats(self) -> None:
+        self.stats["metrics"] = {
+            "enabled": self._emit.active,
+            "emitted": self._emit._seq,
+            "dropped": self._emit.dropped,
+            **({"recent": self._metrics_ring.counts()}
+               if self._metrics_ring is not None else {})}
 
     def start(self):
         self._supervisor.start()
+        self._emit.emit(
+            "service_start",
+            rungs=list(self._ladder.rungs),
+            frame_batch=self.frame_batch, devices=self.devices,
+            frame_target=self.frame_target,
+            max_pending_frames=self.max_pending_frames,
+            deadline_ms=self.res.deadline_ms,
+            platform=self.stats["platform"])
         return self
 
     def stop(self):
@@ -256,6 +288,19 @@ class DetectionService:
         # requests still pending (worker never started, died, or the
         # join timed out mid-batch) would otherwise hang their clients
         self._drain_pending("DetectionService stopped with a backlog")
+        self._emit.emit(
+            "service_stop",
+            frames=self.stats["frames"], batches=self.stats["frame_batches"],
+            answers=self.stats["frame_answers"],
+            errors=self.stats["frame_errors"],
+            deadline_shed=self.stats["deadline_shed"],
+            retries=self.stats["retries"], restarts=self.stats["restarts"],
+            worker_failures=self.stats["worker_failures"],
+            frames_degraded=self.stats["frames_degraded"],
+            latency_ms=self.stats["latency_ms"],
+            ladder=self.stats["ladder"], breaker=self.stats["breaker"])
+        self._metrics_stats()
+        self._emit.close()
 
     def _drain_pending(self, msg: str) -> int:
         """Answer every queued/parked/in-flight request with an error
@@ -447,6 +492,9 @@ class DetectionService:
                 # programs survive (process-wide lru caches), so the
                 # respawn costs a thread, not a recompile.
                 self.stats["restarts"] += 1
+                self._emit.emit("restart",
+                                restarts=self.stats["restarts"],
+                                breaker=self._breaker.snapshot())
                 delay_s = self._retry.delay_ms(
                     max(1, self._breaker.consecutive),
                     self._backoff_rng) / 1e3
@@ -521,6 +569,12 @@ class DetectionService:
                 pass
         self._breaker.record_failure()
         self.stats["breaker"] = self._breaker.snapshot()
+        self._emit.emit("worker_failure",
+                        error=f"{type(exc).__name__}: {exc}",
+                        deterministic=deterministic,
+                        requeued=len(requeue),
+                        failed_fast=len(inflight) - len(requeue),
+                        breaker=self.stats["breaker"])
         self._work.set()             # the next incarnation has work
 
     # ------------------------------------------------------------ worker
@@ -546,6 +600,11 @@ class DetectionService:
             "degraded_mode": self._ladder.rung,
             "error": "DeadlineExceeded: request budget expired before "
                      "compute"})
+        with self._pending_lock:
+            depth = self._pending_frames
+        self._emit.emit("deadline_shed",
+                        shed_total=self.stats["deadline_shed"],
+                        queue_depth=depth, rung=self._ladder.rung)
         return True
 
     def _degraded_result(self, rung: str, frame: np.ndarray
@@ -629,6 +688,7 @@ class DetectionService:
             # worker failure / device loss / thread kill)
             self.faults.before_batch(len(group))
 
+        t_dispatch = time.monotonic()
         t0 = time.perf_counter()
         if rung == "full":
             try:
@@ -705,7 +765,40 @@ class DetectionService:
         self.stats["ladder"] = self._ladder.snapshot()
         self._breaker.record_success()
         self.stats["breaker"] = self._breaker.snapshot()
+        # ------------------------------------------- metrics export (§15)
+        if self._emit.active:
+            devices_used = 1 if len(group) == 1 \
+                else min(self.devices, len(group))
+            self._emit.emit(
+                "batch", n=len(group), ms_per_frame=round(ms, 3),
+                queue_depth=depth, rung=rung,
+                latency_ms=self.stats["latency_ms"],
+                devices_used=devices_used, devices_total=self.devices,
+                occupancy=round(len(group) / self.frame_target, 4))
+            if self._ladder.rung != rung:
+                self._emit.emit(
+                    "rung_transition", rung_from=rung,
+                    rung_to=self._ladder.rung, p99_ms=round(p99, 3),
+                    queue_depth=depth,
+                    direction="degrade" if self._rung_level(
+                        self._ladder.rung) > self._rung_level(rung)
+                    else "recover")
+            if self.metrics.stage_timing:
+                queue_ms = [(t_dispatch - r.t_submit) * 1e3 for r in group]
+                self._emit.emit(
+                    "stage_timing", n=len(group),
+                    queue_ms_mean=round(sum(queue_ms) / len(queue_ms), 3),
+                    queue_ms_max=round(max(queue_ms), 3),
+                    compute_ms_per_frame=round(ms, 3))
+            self._metrics_stats()
         return True
+
+    def _rung_level(self, rung: str) -> int:
+        """Index of a rung in the ladder (higher = more degraded)."""
+        try:
+            return self._ladder.rungs.index(rung)
+        except (AttributeError, ValueError):
+            return 0
 
     def _account_device_frames(self, g: int) -> None:
         """Attribute one dispatched group of g frames to the devices

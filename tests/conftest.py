@@ -1,21 +1,22 @@
 """Test session config.
 
-REPRO_TEST_DEVICES=N forces N host devices (for tests/test_distributed.py:
-MoE expert-parallel paths, DDP + gradient compression, elastic restore).
-Must be set before jax initializes -- conftest import time is safe.
-The dry-run (launch/dryrun.py) manages its own 512-device flag; benches
-and default test runs see 1 device.
+All process-level environment handling lives in `repro.platform`
+(DESIGN.md §15): importing it applies the REPRO_* knobs exactly once,
+before jax initializes -- conftest import time is safe. In particular
+REPRO_TEST_DEVICES=N forces N host devices (for the sharded /
+tiled-UHD suites); the dry-run (launch/dryrun.py) requests its own
+512-device mesh through the same seam; benches and default test runs
+see 1 device.
 """
 import os
+import sys
 
-n = os.environ.get("REPRO_TEST_DEVICES")
-if n:
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={n}")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import platform  # noqa: E402  (applies REPRO_* at import)
 
 # hermetic autotune: an empty path disables the DISK cache (a stale
 # ~/.cache entry from a previous run would short-circuit the probe the
 # autotune tests assert on); tests of the disk cache itself monkeypatch
 # this to a tmp file. In-memory autotune behavior is unchanged.
-os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "")
+platform.hermetic_autotune()

@@ -1,0 +1,339 @@
+"""Metrics export suite (DESIGN.md §15, `repro.obs.metrics`).
+
+Two families, mirroring test_resilience.py:
+
+  * UNIT (no device): the sink zoo -- JSONL round-trip (the schema
+    contract: what JsonlSink wrote, JsonlSink.read re-parses to the
+    emitted dicts), ring bounds/counts, callback/tee fan-out, Emitter
+    stamping + error swallowing, MetricsConfig wiring through
+    PipelineConfig JSON.
+  * INTEGRATION (device): the acceptance criterion from the issue --
+    a chaos run with a JSONL sink emits at least one event per rung
+    transition, per restart, and per deadline shed, and the stream
+    stays schema-valid end to end.
+
+Chaos fixtures reuse test_resilience.py's tiny-frame setup (160x128,
+single scale, threshold -10) so no new programs compile.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.detector import DetectorConfig
+from repro.obs.metrics import (CallbackSink, Emitter, JsonlSink,
+                               MetricsConfig, MetricsSink, NullSink,
+                               RingSink, TeeSink, make_sink)
+from repro.serve.engine import DetectionService
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.resilience import ResilienceConfig
+
+RNG = np.random.default_rng(11)
+SVM = {"w": jnp.asarray(RNG.normal(size=3780).astype(np.float32) * .01),
+       "b": jnp.float32(0.0)}
+DET_CFG = DetectorConfig(score_threshold=-10.0, scales=(1.0,))
+
+#: every event kind the engine can emit (metrics.py module docstring)
+KNOWN_KINDS = {"service_start", "batch", "rung_transition",
+               "deadline_shed", "worker_failure", "restart",
+               "service_stop", "stage_timing"}
+
+
+def _frames(n, h=160, w=128, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, (h, w, 3)).astype(np.uint8)
+            for _ in range(n)]
+
+
+def _service(**kw):
+    kw.setdefault("detector", DET_CFG)
+    kw.setdefault("frame_batch", 1)
+    kw.setdefault("max_wait_ms", 1.0)
+    return DetectionService(SVM, **kw)
+
+
+def _assert_stamped(events):
+    """Schema contract shared by every sink: stamped fields present,
+    seq unique and gapless, t_ms non-negative, kind known. (File order
+    is not asserted: seq is taken under the emitter lock but the write
+    happens outside it, so two threads may interleave lines.)"""
+    assert events, "no events emitted"
+    seqs = sorted(e["seq"] for e in events)
+    assert seqs == list(range(seqs[0], seqs[0] + len(seqs)))
+    assert all(e["t_ms"] >= 0 for e in events)
+    assert {e["kind"] for e in events} <= KNOWN_KINDS
+
+
+# ================================================================ unit
+
+def test_jsonl_round_trip(tmp_path):
+    """THE export contract: what went in comes back out, dict-equal."""
+    path = str(tmp_path / "m.jsonl")
+    sink = JsonlSink(path)
+    em = Emitter(sink, rank0_only=False)
+    sent = [("service_start", {"devices": 4, "rungs": ["full", "coarse"]}),
+            ("batch", {"n": 2, "ms_per_frame": 1.5, "queue_depth": 0}),
+            ("service_stop", {"frames": 2})]
+    for kind, payload in sent:
+        em.emit(kind, **payload)
+    em.close()
+
+    back = JsonlSink.read(path)
+    assert len(back) == len(sent)
+    _assert_stamped(back)
+    for ev, (kind, payload) in zip(back, sent):
+        assert ev["kind"] == kind
+        assert {k: ev[k] for k in payload} == payload
+    # and each line is independently valid JSON (tail -f contract)
+    with open(path) as f:
+        for line in f:
+            json.loads(line)
+
+
+def test_jsonl_numpy_payloads_stay_valid(tmp_path):
+    path = str(tmp_path / "np.jsonl")
+    sink = JsonlSink(path)
+    sink.emit({"kind": "batch", "seq": 0, "t_ms": 0.0,
+               "lat": np.float32(1.5), "n": np.int64(3),
+               "occ": np.asarray([0.5, 1.0])})
+    sink.close()
+    (ev,) = JsonlSink.read(path)
+    assert ev["lat"] == 1.5 and ev["n"] == 3 and ev["occ"] == [0.5, 1.0]
+
+
+def test_jsonl_append_and_close_idempotent(tmp_path):
+    path = str(tmp_path / "a.jsonl")
+    s1 = JsonlSink(path)
+    s1.emit({"kind": "batch", "seq": 0, "t_ms": 0.0})
+    s1.close()
+    s1.close()                                    # double close: fine
+    s1.emit({"kind": "batch", "seq": 9, "t_ms": 0.0})   # after close: dropped
+    s2 = JsonlSink(path)                          # append, not truncate
+    s2.emit({"kind": "batch", "seq": 1, "t_ms": 0.0})
+    s2.close()
+    assert [e["seq"] for e in JsonlSink.read(path)] == [0, 1]
+
+
+def test_ring_sink_bounds_and_counts():
+    ring = RingSink(capacity=3)
+    for i in range(5):
+        ring.emit({"kind": "batch" if i % 2 else "restart", "seq": i})
+    evs = ring.events()
+    assert len(evs) == 3                          # bounded
+    assert [e["seq"] for e in evs] == [2, 3, 4]   # keeps the newest
+    assert ring.counts() == {"restart": 2, "batch": 1}
+    assert [e["seq"] for e in ring.events(kind="batch")] == [3]
+
+
+def test_callback_and_tee_fan_out():
+    got = []
+    ring = RingSink(8)
+    tee = TeeSink([CallbackSink(got.append), ring])
+    tee.emit({"kind": "batch", "seq": 0})
+    tee.close()
+    assert got == ring.events() == [{"kind": "batch", "seq": 0}]
+
+
+def test_sinks_satisfy_protocol():
+    for sink in (NullSink(), RingSink(1), CallbackSink(lambda e: None),
+                 TeeSink([])):
+        assert isinstance(sink, MetricsSink)
+
+
+def test_emitter_stamps_and_swallows_sink_errors():
+    class Boom:
+        def emit(self, event):
+            raise OSError("disk full")
+
+        def close(self):
+            raise OSError("still full")
+
+    em = Emitter(Boom(), rank0_only=False)
+    em.emit("batch", n=1)
+    em.emit("batch", n=2)
+    assert em.dropped == 2                        # serve loop never sees it
+    assert "disk full" in em.last_error
+    em.close()                                    # close errors swallowed too
+
+    ring = RingSink(8)
+    em = Emitter(ring, rank0_only=False)
+    em.emit("batch", n=1)
+    time.sleep(0.002)
+    em.emit("restart", restarts=1)
+    _assert_stamped(ring.events())
+    assert ring.events()[1]["t_ms"] >= ring.events()[0]["t_ms"]
+
+
+def test_emitter_null_sink_inactive():
+    em = Emitter(NullSink(), rank0_only=False)
+    assert not em.active
+    em.emit("batch", n=1)                         # cheap no-op
+    assert em._seq == 0
+
+
+def test_emitter_thread_safe_seq():
+    ring = RingSink(4096)
+    em = Emitter(ring, rank0_only=False)
+
+    def pump():
+        for _ in range(200):
+            em.emit("batch", n=1)
+
+    ts = [threading.Thread(target=pump) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    seqs = sorted(e["seq"] for e in ring.events())
+    assert seqs == list(range(800))               # no duplicate stamps
+
+
+def test_metrics_config_enabled_and_make_sink(tmp_path):
+    assert not MetricsConfig().enabled            # all-default == off
+    sink, ring = make_sink(MetricsConfig())
+    assert isinstance(sink, NullSink) and ring is None
+
+    cfg = MetricsConfig(jsonl_path=str(tmp_path / "m.jsonl"), ring=16)
+    assert cfg.enabled
+    sink, ring = make_sink(cfg)
+    assert isinstance(sink, TeeSink) and isinstance(ring, RingSink)
+    sink.emit({"kind": "batch", "seq": 0, "t_ms": 0.0})
+    sink.close()
+    assert ring.counts() == {"batch": 1}
+    assert len(JsonlSink.read(cfg.jsonl_path)) == 1
+
+    sink, ring = make_sink(MetricsConfig(ring=8))
+    assert isinstance(sink, RingSink) and sink is ring
+
+
+def test_pipeline_config_metrics_round_trip(tmp_path):
+    import dataclasses
+    from repro.api import PipelineConfig
+    mc = MetricsConfig(jsonl_path=str(tmp_path / "m.jsonl"), ring=32,
+                       stage_timing=True)
+    cfg = PipelineConfig()
+    cfg = cfg.replace(service=dataclasses.replace(cfg.service, metrics=mc))
+    back = PipelineConfig.from_json(cfg.to_json())
+    assert back.service.metrics == mc
+    assert back.service.metrics.enabled
+    assert back == cfg
+
+
+# ========================================================= integration
+
+def test_engine_emits_lifecycle_and_batches(tmp_path):
+    """Plain run: service_start .. batch* .. service_stop, in order,
+    and stats()["metrics"] reconciles with the stream."""
+    path = str(tmp_path / "serve.jsonl")
+    svc = _service(metrics=MetricsConfig(jsonl_path=path, ring=64))
+    svc.start()
+    try:
+        for r in svc.detect_frames(_frames(4), timeout=120):
+            assert "detections" in r
+    finally:
+        svc.stop()
+
+    events = JsonlSink.read(path)
+    _assert_stamped(events)
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "service_start" and kinds[-1] == "service_stop"
+    batches = [e for e in events if e["kind"] == "batch"]
+    assert sum(b["n"] for b in batches) == 4
+    for b in batches:
+        assert b["ms_per_frame"] > 0
+        assert b["latency_ms"]["p99"] >= 0     # rolling snapshot rides along
+        assert 0 < b["occupancy"] <= 1.0
+        assert isinstance(b["rung"], str)
+    start = events[0]
+    assert start["platform"]["device_count"] >= 1
+    stop = events[-1]
+    assert stop["frames"] == 4
+
+    m = svc.stats["metrics"]
+    assert m["enabled"] and m["dropped"] == 0
+    assert m["emitted"] == len(events)
+    assert m["recent"]["batch"] == len(batches)
+
+
+def test_metrics_disabled_is_default():
+    svc = _service()
+    svc.start()
+    try:
+        svc.detect_frames(_frames(2), timeout=120)
+    finally:
+        svc.stop()
+    assert svc.stats["metrics"] == {"enabled": False, "emitted": 0,
+                                    "dropped": 0}
+
+
+def test_chaos_run_emits_transition_restart_and_shed(tmp_path):
+    """The issue's acceptance criterion: a chaos run with the JSONL
+    sink enabled emits >= 1 event per rung transition, worker restart,
+    and deadline shed -- and the stream re-parses clean."""
+    path = str(tmp_path / "chaos.jsonl")
+    inj = FaultInjector([
+        FaultSpec("latency", at_batches=(2, 3, 4, 5), latency_ms=80.0),
+        FaultSpec("kill_worker", at_batches=(8,)),
+    ], seed=0)
+    svc = _service(
+        metrics=MetricsConfig(jsonl_path=path, ring=64),
+        faults=inj,
+        resilience=ResilienceConfig(degrade_p99_ms=50.0,
+                                    recover_p99_ms=20.0,
+                                    recover_dwell=2, latency_window=4))
+
+    frames = _frames(14)
+    # shed first: submit with an already-hopeless deadline before start
+    shed_futs = [svc.submit_frame(f, deadline_ms=1.0) for f in frames[:2]]
+    time.sleep(0.05)
+    svc.start()
+    try:
+        for f in frames:
+            svc.submit_frame(f).get(timeout=120)
+    finally:
+        svc.stop()
+    for fut in shed_futs:
+        assert fut.get(timeout=5).get("deadline_exceeded")
+
+    events = JsonlSink.read(path)
+    _assert_stamped(events)
+    counts = {}
+    for e in events:
+        counts[e["kind"]] = counts.get(e["kind"], 0) + 1
+
+    assert counts.get("deadline_shed", 0) >= 1
+    assert counts.get("rung_transition", 0) >= 1
+    assert counts.get("worker_failure", 0) >= 1
+    assert counts.get("restart", 0) >= 1
+
+    trans = [e for e in events if e["kind"] == "rung_transition"]
+    assert any(t["direction"] == "degrade" for t in trans)
+    for t in trans:
+        assert t["rung_from"] != t["rung_to"]
+        assert t["direction"] in ("degrade", "recover")
+    shed = [e for e in events if e["kind"] == "deadline_shed"][-1]
+    assert shed["shed_total"] >= 2     # one event per shed, running total
+    fail = [e for e in events if e["kind"] == "worker_failure"][0]
+    assert "error" in fail and "breaker" in fail
+    rst = [e for e in events if e["kind"] == "restart"][0]
+    assert rst["restarts"] >= 1
+    stop = [e for e in events if e["kind"] == "service_stop"][0]
+    assert stop["restarts"] >= 1 and stop["deadline_shed"] >= 2
+
+
+def test_stage_timing_events_opt_in(tmp_path):
+    path = str(tmp_path / "stage.jsonl")
+    svc = _service(metrics=MetricsConfig(jsonl_path=path,
+                                         stage_timing=True))
+    svc.start()
+    try:
+        svc.detect_frames(_frames(3), timeout=120)
+    finally:
+        svc.stop()
+    stages = [e for e in JsonlSink.read(path)
+              if e["kind"] == "stage_timing"]
+    assert stages, "stage_timing=True emitted no stage events"
+    for e in stages:
+        assert e["queue_ms_mean"] >= 0
+        assert e["compute_ms_per_frame"] > 0
